@@ -1,0 +1,66 @@
+"""Beyond-paper: the DA trade-off at LM scale.
+
+For each assigned architecture: freeze a reduced model with DA, report the
+LUT-cell blow-up (paper's 56× at CONV1 scale → 32× asymptotically for L=8),
+projected per-VMM energy/latency of a DA ReRAM engine for each distinct
+linear-layer shape, and the end-to-end top-1 agreement of DA serving vs
+float serving on random prompts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, reduce_for_smoke
+from repro.core.da import DAConfig
+from repro.core.hwmodel import DADesign
+from repro.models.model import forward, init_model
+from repro.serve.quantize import da_memory_report, freeze_model_da
+
+
+def run(archs=("qwen3-8b", "qwen2-moe-a2.7b", "mamba2-780m")) -> list:
+    rows = []
+    key = jax.random.key(0)
+    for name in archs:
+        cfg = dataclasses.replace(reduce_for_smoke(ARCHS[name]),
+                                  moe_dropless=True)
+        params = init_model(key, cfg)
+        frozen = freeze_model_da(params, DAConfig(x_signed=True), mode="da_lut")
+        rep = da_memory_report(frozen)
+        toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+        ref, _ = forward(params, toks, cfg)
+        got, _ = forward(frozen, toks, cfg)
+        agree = float(np.mean(np.asarray(
+            jnp.argmax(ref, -1) == jnp.argmax(got, -1))))
+        rows.append((name, rep["da_matrices"], rep["cell_blowup"], agree))
+
+    # hardware projection for the real (full-size) layer shapes of qwen3-8b
+    full = ARCHS["qwen3-8b"]
+    for label, k, n in [
+        ("qkv_proj", full.d_model, full.q_dim + 2 * full.kv_dim),
+        ("mlp_up", full.d_model, full.d_ff),
+        ("mlp_down", full.d_ff, full.d_model),
+        ("lm_head", full.d_model, full.vocab),
+    ]:
+        d = DADesign(k=k, n=n)
+        rows.append((
+            f"hw_{label}_{k}x{n}",
+            d.n_arrays,
+            d.latency_ns(),
+            d.energy_vmm_j() * 1e9,
+        ))
+    return rows
+
+
+def main():
+    print("# DA at LM scale: arch, da_matrices|n_arrays, "
+          "blowup|latency_ns, top1_agree|energy_nJ")
+    for r in run():
+        print(",".join(f"{v:.4g}" if isinstance(v, float) else str(v) for v in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks (CPU wall-time): DA LUT / bitplane / int8 / float
+matmul at LM-layer shapes, plus oracle-exactness spot checks.
+
+On this CPU container the Pallas kernels run in interpret mode (a correctness
+tool, not a fast path), so the *jnp reference implementations* are timed —
+they are the lowering the TPU compiles. us_per_call is wall time per VMM.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.da import DAConfig, build_luts
+from repro.kernels import ref
+from repro.core.quant import quantize_acts_signed, quantize_weights
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    cfg = DAConfig(x_signed=True)
+    for m, k, n in [(64, 512, 512), (256, 1024, 1024), (64, 4096, 4096)]:
+        x = jnp.asarray(rng.normal(size=(m, k)), dtype=jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)), dtype=jnp.float32)
+        wq = quantize_weights(w)
+        xq = quantize_acts_signed(x)
+        luts = build_luts(wq.q)
+
+        f_float = jax.jit(lambda a, b: a @ b)
+        f_int8 = jax.jit(lambda a, b: jnp.matmul(a, b, preferred_element_type=jnp.int32))
+        f_bp = jax.jit(lambda a, b: ref.bitplane_vmm_ref(a, b, cfg))
+        f_lut = jax.jit(lambda a, l: ref.da_vmm_ref(a, l, cfg))
+
+        t_float = _time(f_float, x, w)
+        t_int8 = _time(f_int8, xq.q, wq.q)
+        t_bp = _time(f_bp, xq.q, wq.q)
+        t_lut = _time(f_lut, xq.q, luts)
+        exact = bool(
+            (np.asarray(f_bp(xq.q, wq.q)) == np.asarray(f_lut(xq.q, luts))).all()
+        )
+        shape = f"{m}x{k}x{n}"
+        rows.append((f"float_matmul_{shape}", t_float, "baseline"))
+        rows.append((f"int8_matmul_{shape}", t_int8, "quant baseline"))
+        rows.append((f"da_bitplane_{shape}", t_bp, f"exact={exact}"))
+        rows.append((f"da_lut_{shape}", t_lut, f"lut_cells={luts.size}"))
+    return rows
+
+
+def main():
+    print("# kernel micro (CPU wall-time; TPU path = same HLO on MXU)")
+    print("name,us_per_call,derived")
+    for name, us, note in run():
+        print(f"{name},{us:.1f},{note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints the
+per-cell three-term roofline, dominant bottleneck, MODEL_FLOPS/HLO ratio and
+roofline fraction. Does not compile anything itself.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_cells(pattern: str = "*.json") -> list:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print(f"# no dry-run artifacts under {ART} — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print("# cell,ok,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+          "useful_flops_frac,roofline_frac")
+    n_ok = 0
+    for c in cells:
+        r = c.get("roofline", {})
+        ok = c.get("ok", False)
+        n_ok += bool(ok)
+        print(
+            f"{c['cell']},{ok},"
+            f"{r.get('t_compute_s', 0):.3e},{r.get('t_memory_s', 0):.3e},"
+            f"{r.get('t_collective_s', 0):.3e},{r.get('bottleneck', '-')},"
+            f"{r.get('useful_flops_fraction', 0):.3f},"
+            f"{r.get('roofline_fraction', 0):.4f}"
+        )
+    print(f"# {n_ok}/{len(cells)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 5: scaling the weight matrix 8×8 → 16×16 → 32×32 (and beyond,
+to LM-layer sizes) — latency stays read-dominated; memory/energy grow
+linearly in sensed columns. Also sweeps the latency-vs-x_bits trade
+(the paper's core claim: cycles = input bit width, independent of columns)."""
+from __future__ import annotations
+
+from repro.core.hwmodel import BitSliceDesign, DADesign
+
+
+def run() -> list:
+    rows = []
+    for k, n in [(8, 8), (16, 16), (32, 32), (64, 64), (128, 128),
+                 (25, 6), (4096, 4096), (4096, 12288)]:
+        d = DADesign(k=k, n=n)                              # paper's chain
+        dt = DADesign(k=k, n=n, adder_topology="tree")      # beyond-paper
+        b = BitSliceDesign(k=k, n=n)  # ADC resolution scales with K (§I)
+        rows.append((
+            f"{k}x{n}",
+            d.n_arrays,
+            d.latency_ns(),
+            dt.latency_ns(),
+            dt.energy_vmm_j() * 1e12,
+            d.memory_cells,
+            b.latency_ns(),
+            b.energy_vmm_j() * 1e12,
+            b.latency_ns() / dt.latency_ns(),
+            b.energy_vmm_j() / dt.energy_vmm_j(),
+        ))
+    return rows
+
+
+def run_bitwidth() -> list:
+    """Latency ∝ x_bits (bit-serial cycles), not matrix columns."""
+    rows = []
+    for x_bits in (2, 4, 6, 8):
+        for n in (8, 64):
+            d = DADesign(k=8, n=n, x_bits=x_bits)
+            rows.append((f"b{x_bits}_n{n}", d.latency_ns()))
+    return rows
+
+
+def main():
+    print("# Fig.5 scaling: KxN, n_arrays, DA(chain) ns, DA(tree) ns, "
+          "DA(tree) pJ, DA cells, BS ns, BS pJ, lat_ratio(tree), "
+          "energy_ratio(tree)")
+    for r in run():
+        print(",".join(f"{v:.4g}" if isinstance(v, float) else str(v) for v in r))
+    print("# latency vs input bit width (columns don't matter)")
+    for name, ns in run_bitwidth():
+        print(f"{name},{ns:.4g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, async, elastic.
+
+Layout: ``<dir>/step_<n>/arrays.npz`` + ``manifest.json`` (tree structure,
+shapes, dtypes, crc32 per array, step). Writes go to ``step_<n>.tmp`` and are
+renamed only after fsync — a crash mid-write never corrupts the latest valid
+checkpoint. ``restore`` device_puts each leaf with the *target* sharding, so
+a run can restart on a different mesh (elastic re-scaling) or a different
+device count: resharding is a device_put, not a format concern.
+
+Async mode hands the (host-side) arrays to a writer thread so the train loop
+only blocks for the device→host copy, not the disk write.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # bfloat16/fp8 — numpy custom dtypes (ships w/ jax)
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _savable(v: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bf16/fp8) — byte-view them; the manifest
+    records the true dtype for restore."""
+    if v.dtype.kind == "V" or v.dtype.name not in np.sctypeDict:
+        return np.ascontiguousarray(v).view(np.uint8)
+    return v
+
+
+def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **{k: _savable(v) for k, v in flat.items()})
+    manifest = {
+        "step": step,
+        "arrays": {
+            k: {
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()),
+            }
+            for k, v in flat.items()
+        },
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, template: Any, shardings: Any = None) -> Any:
+    """Restore into ``template``'s tree structure; verify checksums; place
+    each leaf with the matching entry of ``shardings`` (or template sharding)
+    — this is the elastic-restart path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t = _flatten(template)
+    flat_s = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for key, tmpl in flat_t.items():
+        arr = data[key]
+        meta = manifest["arrays"][key]
+        true_dtype = _np_dtype(meta["dtype"])
+        if arr.dtype != true_dtype:  # byte-viewed exotic dtype
+            arr = arr.view(true_dtype).reshape(meta["shape"])
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != meta["crc32"]:
+            raise IOError(f"checksum mismatch for {key} in {path}")
+        arr = arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr
+        sh = flat_s.get(key)
+        if sh is None and hasattr(tmpl, "sharding"):
+            sh = tmpl.sharding
+        out[key] = jax.device_put(arr, sh) if sh is not None else arr
+    leaves_keys = list(_flatten(template).keys())
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in leaves_keys])
+
+
+class AsyncCheckpointer:
+    """Background writer thread; the caller only pays device→host copy time."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, tree = item
+                save(self.directory, step, tree, keep=self.keep)
+            except BaseException as e:  # surfaced on next submit/close
+                self._exc = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree: Any) -> None:
+        if self._exc:
+            raise self._exc
+        host_tree = jax.tree.map(np.asarray, tree)  # device→host now
+        self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._exc:
+            raise self._exc
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join()
+        if self._exc:
+            raise self._exc

@@ -1,0 +1,2 @@
+# One module per assigned architecture (exact public configs) + LeNet-5
+# (the paper's own workload). Import repro.configs.registry for lookup.

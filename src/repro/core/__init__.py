@@ -1,0 +1,19 @@
+# The paper's primary contribution: Distributed-Arithmetic VMM as a
+# composable JAX library (quantization, LUT construction, DA execution
+# modes, bit-slicing baseline, calibrated hardware cost model).
+from repro.core.da import (  # noqa: F401
+    DAConfig,
+    build_luts,
+    da_matmul,
+    da_vmm_bitplane,
+    da_vmm_lut,
+    da_vmm_onehot,
+)
+from repro.core.linear import DAFrozenLinear, freeze_da  # noqa: F401
+from repro.core.quant import (  # noqa: F401
+    QTensor,
+    int_matmul,
+    quantize_acts_signed,
+    quantize_acts_unsigned,
+    quantize_weights,
+)

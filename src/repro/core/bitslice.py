@@ -1,0 +1,77 @@
+"""Bit-slicing in-memory VMM — the paper's comparison baseline (§IV, Fig. 10).
+
+ISAAC-style [Shafiee et al., ISCA'16]: the 8-bit weights are stored in binary
+form across 8 columns (one bit per column); inputs are fed bit-serially over 8
+cycles through 1-bit DACs. Each cycle, every column's bit-line current is the
+*count* of rows where (input bit == 1 AND stored weight bit == 1); a 5-bit ADC
+(for ≤25 rows) digitizes that count. Two shift-and-add stages then undo the
+weight slicing (×2^bw, with the weight's sign column carrying −2^7 for two's
+complement) and the input slicing (×2^bx).
+
+This module is the *exact digital emulation* of that datapath, used both as a
+functional baseline (must equal X @ W exactly when the ADC has enough
+resolution) and as the workload descriptor for the hardware cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.da import bit_coefs
+
+
+@dataclasses.dataclass(frozen=True)
+class BitSliceConfig:
+    w_bits: int = 8
+    x_bits: int = 8
+    w_signed: bool = True
+    x_signed: bool = False
+    adc_bits: int | None = None  # None → exact (enough resolution for #rows)
+
+
+def weight_bit_columns(wq: jax.Array, cfg: BitSliceConfig) -> jax.Array:
+    """Binary storage of W: [K, N, w_bits] of {0,1} (two's-complement bits)."""
+    mask = (1 << cfg.w_bits) - 1
+    wu = jnp.bitwise_and(wq.astype(jnp.int32), mask)
+    bits = [jnp.bitwise_and(jnp.right_shift(wu, b), 1) for b in range(cfg.w_bits)]
+    return jnp.stack(bits, axis=-1)
+
+
+def bitslice_vmm(xq: jax.Array, wq: jax.Array, cfg: BitSliceConfig) -> jax.Array:
+    """Exact emulation of the bit-sliced analog VMM datapath.
+
+    xq: [M, K] integer codes; wq: [K, N] integer codes.
+    Returns int32 [M, N] == xq @ wq when the ADC resolution suffices.
+    """
+    k = xq.shape[-1]
+    wcols = weight_bit_columns(wq, cfg)  # [K, N, w_bits]
+    xmask = (1 << cfg.x_bits) - 1
+    xu = jnp.bitwise_and(xq.astype(jnp.int32), xmask)
+
+    w_coef = jnp.asarray(bit_coefs(cfg.w_bits, cfg.w_signed), dtype=jnp.int32)
+    x_coef = jnp.asarray(bit_coefs(cfg.x_bits, cfg.x_signed), dtype=jnp.int32)
+
+    acc = jnp.zeros(xq.shape[:-1] + (wq.shape[-1],), dtype=jnp.int32)
+    for bx in range(cfg.x_bits):
+        xplane = jnp.bitwise_and(jnp.right_shift(xu, bx), 1)  # [M, K] DAC inputs
+        # Column currents: counts[m, n, bw] = Σ_k xbit·wbit  (the ADC reading)
+        counts = jnp.einsum(
+            "mk,knb->mnb", xplane, wcols, preferred_element_type=jnp.int32
+        )
+        if cfg.adc_bits is not None:
+            counts = jnp.clip(counts, 0, (1 << cfg.adc_bits) - 1)
+        # First shift-and-add: undo weight slicing.
+        col = jnp.einsum("mnb,b->mn", counts, w_coef)
+        # Second shift-and-add: undo input slicing.
+        acc = acc + x_coef[bx] * col
+    return acc
+
+
+def adc_bits_required(rows: int) -> int:
+    """Minimum ADC resolution to digitize a column of ``rows`` 1-bit products
+    without clipping (paper: 5-bit for 25 rows)."""
+    import math
+
+    return max(1, math.ceil(math.log2(rows + 1)))

@@ -1,0 +1,249 @@
+"""Distributed-Arithmetic VMM (the paper's core contribution, §II).
+
+The identity implemented here, bit-exactly, for integer X [M,K] and constant
+integer W [K,N]::
+
+    Y[m,n] = Σ_k X[m,k]·W[k,n]
+           = Σ_b coef(b) · Σ_g  LUT_g[ addr_g(m,b), n ]
+
+where rows of W are partitioned into groups of ``group_size`` (paper: 8, one
+ReRAM processing-memory array per group), ``LUT_g[a,n] = Σ_{i: bit i of a set}
+W[g·L+i, n]`` is the table of all 2^L possible weight sums (written once into
+the PMA, §III-A), and ``addr_g(m,b)`` packs bit-plane ``b`` of the group's
+inputs into the PMA address (§II-C).  ``coef(b) = 2^b`` except the sign bit of
+two's-complement inputs which carries ``-2^(B-1)``.
+
+Three equivalent execution modes are provided:
+
+* ``da_vmm_lut``     — faithful: materialized LUTs + gather (the memory read).
+* ``da_vmm_onehot``  — TPU-native: LUT read as one-hot(addr) @ LUT on the MXU
+                       (the address decoder IS a one-hot expansion). Same math.
+* ``da_vmm_bitplane``— storage-free: Σ_b coef(b)·(xbit_b @ W); the MXU computes
+                       each cycle's weight sums on the fly instead of reading
+                       precomputed ones.
+
+All return the exact int32 accumulator (== X @ W in integer arithmetic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DAConfig:
+    """Configuration of the DA engine.
+
+    group_size: rows per processing-memory array (paper: 8 → 256-row PMA).
+    x_bits:     bit-serial cycles (input bit width; paper: 8).
+    x_signed:   two's-complement inputs (LM activations) vs unsigned (images).
+    """
+
+    group_size: int = 8
+    x_bits: int = 8
+    x_signed: bool = False
+
+    @property
+    def lut_rows(self) -> int:
+        return 1 << self.group_size
+
+
+def num_groups(k: int, group_size: int) -> int:
+    return -(-k // group_size)
+
+
+def pad_to_groups(w: jax.Array, group_size: int) -> jax.Array:
+    """Zero-pad the contraction dim of W [K,N] to a multiple of group_size."""
+    k = w.shape[0]
+    pad = (-k) % group_size
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    return w
+
+
+def build_luts(w: jax.Array, group_size: int = 8) -> jax.Array:
+    """Pre-VMM weight summation (paper §III-A, Fig. 6).
+
+    Returns LUTs of shape [G, 2^L, N] with ``LUT[g, a, n] = Σ_{i<L, a_i=1}
+    W[g·L+i, n]``.  Built by iterative doubling — exactly the paper's
+    weight-summation adder computing "all possible sums of the weights":
+    each row added once per existing table half (2^L − 1 additions/column).
+    """
+    l = group_size
+    w = pad_to_groups(w.astype(jnp.int32), l)
+    k, n = w.shape
+    g = k // l
+    wg = w.reshape(g, l, n)
+
+    # Iterative doubling over rows of each group: table_{r+1} = [table_r ;
+    # table_r + w_r]. Address bit r ↔ group row r (LSB-first).
+    luts = jnp.zeros((g, 1, n), dtype=jnp.int32)
+    for r in range(l):
+        luts = jnp.concatenate([luts, luts + wg[:, r : r + 1, :]], axis=1)
+    return luts  # [G, 2^L, N]
+
+
+def bit_plane(xq: jax.Array, b: int) -> jax.Array:
+    """Bit b of the (two's-complement or unsigned) integer codes, in {0,1}."""
+    return jnp.bitwise_and(jnp.right_shift(xq, b), 1)
+
+
+def bit_coefs(x_bits: int, x_signed: bool) -> np.ndarray:
+    """Per-bit weights; two's complement puts −2^(B−1) on the sign bit."""
+    coefs = np.array([1 << b for b in range(x_bits)], dtype=np.int64)
+    if x_signed:
+        coefs[-1] = -coefs[-1]
+    return coefs
+
+
+def group_addresses(xq: jax.Array, cfg: DAConfig) -> jax.Array:
+    """Pack bit-planes of X [.., K] into PMA addresses [.., B, G].
+
+    addr[..., b, g] = Σ_i bit_b(X[..., g·L+i]) << i   (the decoder input of
+    cycle b for PMA g; paper Fig. 4 applies one bit of X1..X8 per cycle).
+    """
+    l = cfg.group_size
+    k = xq.shape[-1]
+    pad = (-k) % l
+    if pad:
+        xq = jnp.pad(xq, [(0, 0)] * (xq.ndim - 1) + [(0, pad)])
+    g = xq.shape[-1] // l
+    xg = xq.reshape(xq.shape[:-1] + (g, l))
+    # For signed codes, take the two's-complement bit pattern of the low B bits.
+    mask = (1 << cfg.x_bits) - 1
+    xg = jnp.bitwise_and(xg, mask)
+    shifts = jnp.arange(l, dtype=jnp.int32)
+    addrs = []
+    for b in range(cfg.x_bits):
+        bits = jnp.bitwise_and(jnp.right_shift(xg, b), 1)
+        addrs.append(jnp.sum(bits << shifts, axis=-1))  # [.., G]
+    return jnp.stack(addrs, axis=-2)  # [.., B, G]
+
+
+def da_vmm_lut(xq: jax.Array, luts: jax.Array, cfg: DAConfig) -> jax.Array:
+    """Faithful DA VMM: LUT gather (memory readout) + shift-and-add.
+
+    xq:   [M, K] int32 codes (two's complement if cfg.x_signed)
+    luts: [G, 2^L, N] from build_luts
+    returns int32 [M, N] == xq @ W exactly.
+    """
+    addr = group_addresses(xq, cfg)  # [M, B, G]
+    # Memory readout MR[m,b,g,:] = luts[g, addr[m,b,g], :]
+    mr = jnp.take_along_axis(
+        luts[None, None],  # [1,1,G,2^L,N]
+        addr[..., None, None].astype(jnp.int32),  # [M,B,G,1,1]
+        axis=3,
+    )[..., 0, :]  # [M, B, G, N]
+    per_cycle = jnp.sum(mr, axis=2)  # adder tree over PMAs → [M, B, N]
+    coefs = jnp.asarray(bit_coefs(cfg.x_bits, cfg.x_signed), dtype=jnp.int32)
+    # Shift-and-add accumulation (MSB-first in hardware; order-free here).
+    return jnp.einsum("mbn,b->mn", per_cycle, coefs).astype(jnp.int32)
+
+
+def da_vmm_onehot(xq: jax.Array, luts: jax.Array, cfg: DAConfig) -> jax.Array:
+    """TPU-native DA VMM: the address decoder as one-hot, readout on the MXU.
+
+    one-hot(addr) [M, G·2^L] @ luts [G·2^L, N] contracts groups and addresses
+    in a single matmul — the systolic-array analogue of all PMAs reading and
+    their adder tree summing in one cycle.
+    """
+    g, r, n = luts.shape
+    addr = group_addresses(xq, cfg)  # [M, B, G]
+    onehot = jax.nn.one_hot(addr, r, dtype=jnp.int32)  # [M, B, G, 2^L]
+    m = xq.shape[0]
+    b = cfg.x_bits
+    flat = onehot.reshape(m * b, g * r)
+    table = luts.reshape(g * r, n)
+    per_cycle = jnp.matmul(flat, table, preferred_element_type=jnp.int32)
+    per_cycle = per_cycle.reshape(m, b, n)
+    coefs = jnp.asarray(bit_coefs(cfg.x_bits, cfg.x_signed), dtype=jnp.int32)
+    return jnp.einsum("mbn,b->mn", per_cycle, coefs).astype(jnp.int32)
+
+
+def da_vmm_bitplane(
+    xq: jax.Array, wq: jax.Array, cfg: DAConfig, out_dtype=jnp.int32
+) -> jax.Array:
+    """Storage-free DA: Σ_b coef(b) · (xbit_b @ W). Bit-exact, LUT-free.
+
+    This is the deployable mode for large LM layers (a 2^L/L× LUT blow-up per
+    layer is the paper's 56×-more-cells trade-off; on TPU the MXU computes the
+    per-cycle weight sums at full throughput instead).
+    """
+    mask = (1 << cfg.x_bits) - 1
+    xm = jnp.bitwise_and(xq, mask)
+    wi = wq.astype(jnp.int32)
+    acc = jnp.zeros(xq.shape[:-1] + (wq.shape[-1],), dtype=jnp.int32)
+    # MSB-first shift-and-add, mirroring the paper's LSIS accumulator:
+    # acc ← 2·acc + (xbit_b @ W), with the sign-bit cycle subtracting.
+    for b in range(cfg.x_bits - 1, -1, -1):
+        plane = jnp.bitwise_and(jnp.right_shift(xm, b), 1)
+        mr = jnp.matmul(plane, wi, preferred_element_type=jnp.int32)
+        sign = -1 if (cfg.x_signed and b == cfg.x_bits - 1) else 1
+        acc = acc + sign * (1 << b) * mr
+    return acc.astype(out_dtype)
+
+
+def da_vmm_bitplane_stacked(
+    xq: jax.Array, wq: jax.Array, cfg: DAConfig, out_dtype=jnp.int32
+) -> jax.Array:
+    """Beyond-paper TPU mapping of bit-serial DA (§Perf lever L7).
+
+    The hardware runs the 8 DA cycles serially *in time*, re-reading the PMA
+    each cycle; a serial TPU port therefore reads W 8×. Stacking the 8
+    bit-planes along the M dimension runs the cycles *spatially* on the MXU:
+
+        Y = coefs · reshape( [xbit_7; …; xbit_0] @ W , (B, M, N) )
+
+    — one int8 matmul, W read once. Bit-exact (== da_vmm_bitplane)."""
+    mask = (1 << cfg.x_bits) - 1
+    xm = jnp.bitwise_and(xq, mask)
+    planes = jnp.stack(
+        [jnp.bitwise_and(jnp.right_shift(xm, b), 1) for b in range(cfg.x_bits)]
+    ).astype(jnp.int8)  # [B_bits, M, K] — bit axis is a LEADING batch dim so
+    # the (data-)sharded M dim is never reshaped (a flat [8M, K] form makes
+    # GSPMD all-gather the planes; einsum keeps the dot batched instead).
+    mr = jnp.einsum(
+        "bmk,kn->bmn", planes, wq.astype(jnp.int8),
+        preferred_element_type=jnp.int32,
+    )
+    coefs = jnp.asarray(bit_coefs(cfg.x_bits, cfg.x_signed), dtype=jnp.int32)
+    return jnp.einsum("bmn,b->mn", mr, coefs).astype(out_dtype)
+
+
+@partial(jax.jit, static_argnames=("cfg", "mode"))
+def da_matmul(
+    x: jax.Array,
+    wq: jax.Array,
+    w_scale: jax.Array,
+    cfg: DAConfig,
+    mode: str = "bitplane",
+    luts: Optional[jax.Array] = None,
+) -> jax.Array:
+    """End-to-end DA linear: float in → quantize → DA integer VMM → dequantize.
+
+    x: [.., K] float; wq int [K, N] with per-column w_scale [1, N] (or scalar).
+    """
+    from repro.core.quant import quantize_acts_signed
+
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    xqt = quantize_acts_signed(x2, bits=cfg.x_bits)
+    scfg = dataclasses.replace(cfg, x_signed=True)
+    if mode == "lut":
+        assert luts is not None, "lut mode requires precomputed LUTs"
+        acc = da_vmm_lut(xqt.q, luts, scfg)
+    elif mode == "onehot":
+        assert luts is not None, "onehot mode requires precomputed LUTs"
+        acc = da_vmm_onehot(xqt.q, luts, scfg)
+    elif mode == "bitplane":
+        acc = da_vmm_bitplane(xqt.q, wq, scfg)
+    else:
+        raise ValueError(f"unknown DA mode: {mode}")
+    y = acc.astype(jnp.float32) * xqt.scale * w_scale
+    return y.reshape(lead + (wq.shape[-1],))

@@ -1,0 +1,87 @@
+"""Symmetric uniform quantization (paper §II-C: post-training symmetric INT8).
+
+Weights: per-output-channel symmetric int8 in [-128, 127] (paper quantizes the
+trained float weights of LeNet-5 to 8-bit signed integers).
+Activations: either unsigned 8-bit [0, 255] (grayscale image inputs, the paper's
+case) or signed int8 with dynamic per-token scale (LM serving path).
+
+All quantized tensors are carried as int32 holding the integer code plus a float
+scale, so downstream integer arithmetic (DA / bit-slicing emulation) is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """An integer-quantized tensor: values ≈ q * scale."""
+
+    q: jax.Array          # integer codes, int32
+    scale: jax.Array      # broadcastable float32 scale
+    bits: int             # bit width of the codes
+    signed: bool          # two's-complement (True) or unsigned (False)
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+def quantize_weights(
+    w: jax.Array, bits: int = 8, axis: Optional[int] = 0, eps: float = 1e-8
+) -> QTensor:
+    """Symmetric per-channel weight quantization.
+
+    ``axis`` is the *contraction* axis (reduced when computing the per-channel
+    max); the surviving axes get independent scales. ``axis=None`` → per-tensor.
+    """
+    qmax = (1 << (bits - 1)) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return QTensor(q=q, scale=scale.astype(jnp.float32), bits=bits, signed=True)
+
+
+def quantize_acts_signed(x: jax.Array, bits: int = 8, eps: float = 1e-8) -> QTensor:
+    """Dynamic per-row (per-token) symmetric activation quantization."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return QTensor(q=q, scale=scale.astype(jnp.float32), bits=bits, signed=True)
+
+
+def quantize_acts_unsigned(x: jax.Array, bits: int = 8, eps: float = 1e-8) -> QTensor:
+    """Unsigned activation quantization (e.g. [0,255] grayscale inputs)."""
+    qmax = (1 << bits) - 1
+    amax = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(jnp.round(x / scale), 0, qmax).astype(jnp.int32)
+    return QTensor(q=q, scale=scale.astype(jnp.float32), bits=bits, signed=False)
+
+
+def int_matmul(xq: QTensor, wq: QTensor) -> jax.Array:
+    """Exact integer reference matmul; dequantized float output."""
+    acc = jnp.matmul(xq.q, wq.q, preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * xq.scale * wq.scale
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda t: ((t.q, t.scale), (t.bits, t.signed)),
+    lambda aux, ch: QTensor(q=ch[0], scale=ch[1], bits=aux[0], signed=aux[1]),
+)

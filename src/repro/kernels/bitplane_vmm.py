@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: storage-free (bit-plane) Distributed Arithmetic VMM.
+
+The deployable DA mode for large LM layers (DESIGN.md §2): instead of reading
+precomputed weight sums from a materialized LUT, the MXU computes each
+bit-serial cycle's weight sums on the fly —
+
+    Y = Σ_b coef(b) · (xbit_b @ W),   xbit_b ∈ {0,1}
+
+which is exactly the paper's per-cycle ``MR`` with the systolic array playing
+the role of the processing-memory array. Multiplications involve only the
+{0,1} bit operand (multiplier-free in the DA sense); accumulation is int32.
+
+Tiling: grid = (M/bm, N/bn, K/bk). W is streamed through VMEM as int8-ranged
+[bk, bn] tiles; the input tile [bm, bk] is decomposed into its 8 bit-planes
+in-register. K is the reduction axis (output revisited, init at k == 0).
+
+Exactness: per-tile dot values ≤ bk·127 < 2²⁴ for bk ≤ 2048, so fp32 MXU
+passes are exact; the int32 accumulator covers the full 21-bit+ growth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.da import DAConfig, bit_coefs
+
+
+def _bitplane_kernel(x_ref, w_ref, out_ref, *, cfg: DAConfig):
+    k_idx = pl.program_id(2)
+    x = x_ref[...]  # [bm, bk] int32 codes
+    w = w_ref[...].astype(jnp.float32)  # [bk, bn]
+
+    mask = (1 << cfg.x_bits) - 1
+    xm = jnp.bitwise_and(x, mask)
+    coefs = bit_coefs(cfg.x_bits, cfg.x_signed)
+
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.int32)
+    for b in range(cfg.x_bits):  # unrolled bit-serial cycles
+        plane = jnp.bitwise_and(jnp.right_shift(xm, b), 1).astype(jnp.float32)
+        mr = jnp.dot(plane, w, preferred_element_type=jnp.float32)
+        acc = acc + jnp.int32(coefs[b]) * mr.astype(jnp.int32)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(k_idx != 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret"))
+def bitplane_vmm_pallas(
+    xq: jax.Array,
+    wq: jax.Array,
+    cfg: DAConfig,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bit-plane DA VMM via Pallas. xq [M,K] int codes, wq [K,N] int codes.
+
+    Returns int32 [M, N] == xq @ wq exactly.
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert bk * 127 < (1 << 24), "fp32 per-tile exactness bound"
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        xq = jnp.pad(xq, ((0, pm), (0, pk)))
+    if pk or pn:
+        wq = jnp.pad(wq, ((0, pk), (0, pn)))
+    mm, nn, kk = m + pm, n + pn, k + pk
+
+    out = pl.pallas_call(
+        functools.partial(_bitplane_kernel, cfg=cfg),
+        grid=(mm // bm, nn // bn, kk // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.int32),
+        interpret=interpret,
+    )(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    return out[:m, :n]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: Distributed-Arithmetic VMM with in-VMEM LUT readout.
+
+TPU-native mapping of the paper's PMA datapath (DESIGN.md §2):
+
+  * the PMA *address decoder* (8-bit address → 1-of-256 wordline) becomes an
+    in-register one-hot expansion ``iota == addr``;
+  * the *array readout + inter-PMA adder tree* becomes a single MXU matmul
+    ``onehot[bm, G·256] @ LUT[G·256, bn]`` — the systolic array sums the
+    selected weight-sum rows of every PMA group in one pass;
+  * the *bit-serial shift-and-add accumulator* becomes an unrolled loop over
+    the 8 bit-planes with int32 accumulation (covers the 21-bit growth).
+
+Tiling: grid = (M/bm, N/bn, G/bg); the LUT is streamed through VMEM in
+``bg``-group chunks of shape [bg·256, bn] (bg=8, bn=256 → 2 MB int32, well
+within the ~16 MB VMEM budget together with the [bm, bg·8] input tile and the
+[bm, bn] int32 accumulator). The G axis is the reduction dimension — the
+output block is revisited and accumulated, initialized at g == 0.
+
+Exactness: one-hot (0/1) × LUT entries (|·| ≤ group·127 ≤ 2¹¹) dot products
+stay far below 2²⁴, so the fp32 MXU pass is exact; accumulation is int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.da import DAConfig, bit_coefs
+
+
+def _da_vmm_kernel(x_ref, lut_ref, out_ref, *, cfg: DAConfig, bg: int):
+    """One (m, n, g) tile: bg PMA groups × all bit-planes, accumulated."""
+    l = cfg.group_size
+    r = 1 << l
+    g_idx = pl.program_id(2)
+
+    x = x_ref[...]  # [bm, bg*L] int32 codes of this group chunk
+    lut = lut_ref[...].astype(jnp.float32)  # [bg*R, bn]
+    bm = x.shape[0]
+
+    mask = (1 << cfg.x_bits) - 1
+    xm = jnp.bitwise_and(x, mask).reshape(bm, bg, l)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, l), 2)
+
+    # one-hot column index decomposition: col c ↔ (group c//R, address c%R)
+    col_addr = jax.lax.broadcasted_iota(jnp.int32, (1, bg, r), 2)
+
+    coefs = bit_coefs(cfg.x_bits, cfg.x_signed)
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.int32)
+    for b in range(cfg.x_bits):  # the 8 bit-serial "memory cycles", unrolled
+        bits = jnp.bitwise_and(jnp.right_shift(xm, b), 1)
+        addr = jnp.sum(bits << shifts, axis=-1)  # [bm, bg] PMA addresses
+        onehot = (addr[:, :, None] == col_addr).astype(jnp.float32)
+        onehot = onehot.reshape(bm, bg * r)  # decoder output (wordlines)
+        mr = jnp.dot(onehot, lut, preferred_element_type=jnp.float32)
+        acc = acc + jnp.int32(coefs[b]) * mr.astype(jnp.int32)
+
+    @pl.when(g_idx == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(g_idx != 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bn", "bg", "interpret")
+)
+def da_vmm_pallas(
+    xq: jax.Array,
+    luts: jax.Array,
+    cfg: DAConfig,
+    bm: int = 256,
+    bn: int = 256,
+    bg: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """DA VMM via Pallas. xq [M, K] int32 codes; luts [G, 2^L, N] int32.
+
+    Returns int32 [M, N] == xq @ W exactly. ``interpret=True`` executes the
+    kernel body on CPU (this container); on TPU pass ``interpret=False``.
+    """
+    m, k = xq.shape
+    g, r, n = luts.shape
+    l = cfg.group_size
+    assert r == (1 << l), (r, l)
+    assert g * l >= k
+
+    # Pad every axis to tile multiples (zero rows address LUT entry 0 == 0).
+    pad_k = g * l - k
+    if pad_k:
+        xq = jnp.pad(xq, ((0, 0), (0, pad_k)))
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bg = min(bg, g)
+    pm, pn, pg = (-m) % bm, (-n) % bn, (-g) % bg
+    if pm:
+        xq = jnp.pad(xq, ((0, pm), (0, 0)))
+    if pg:
+        xq = jnp.pad(xq, ((0, 0), (0, pg * l)))
+        luts = jnp.pad(luts, ((0, pg), (0, 0), (0, 0)))
+    if pn:
+        luts = jnp.pad(luts, ((0, 0), (0, 0), (0, pn)))
+    mm, nn, gg = m + pm, n + pn, g + pg
+    lut2d = luts.reshape(gg * r, nn)
+
+    out = pl.pallas_call(
+        functools.partial(_da_vmm_kernel, cfg=cfg, bg=bg),
+        grid=(mm // bm, nn // bn, gg // bg),
+        in_specs=[
+            pl.BlockSpec((bm, bg * l), lambda i, j, gi: (i, gi)),
+            pl.BlockSpec((bg * r, bn), lambda i, j, gi: (gi, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, gi: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.int32),
+        interpret=interpret,
+    )(xq, lut2d)
+    return out[:m, :n]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact integer references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.da import DAConfig, bit_coefs, da_vmm_lut
+
+
+def da_vmm_ref(xq, luts, cfg: DAConfig):
+    """Oracle for kernels/da_vmm.py: faithful LUT-gather DA VMM → int32."""
+    return da_vmm_lut(xq, luts, cfg)
+
+
+def bitplane_vmm_ref(xq, wq, cfg: DAConfig):
+    """Oracle for kernels/bitplane_vmm.py: Σ_b coef(b)·(xbit_b @ W) → int32."""
+    mask = (1 << cfg.x_bits) - 1
+    xm = jnp.bitwise_and(xq.astype(jnp.int32), mask)
+    coefs = bit_coefs(cfg.x_bits, cfg.x_signed)
+    acc = jnp.zeros(xq.shape[:-1] + (wq.shape[-1],), dtype=jnp.int32)
+    for b in range(cfg.x_bits):
+        plane = jnp.bitwise_and(jnp.right_shift(xm, b), 1)
+        mr = jnp.matmul(plane, wq.astype(jnp.int32), preferred_element_type=jnp.int32)
+        acc = acc + int(coefs[b]) * mr
+    return acc

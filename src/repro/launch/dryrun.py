@@ -1,0 +1,333 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost analysis + collective schedule.
+
+This is the proof that the distribution config is coherent without hardware:
+a sharding mismatch, OOM-at-compile or unsupported collective fails here.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+Artifacts: one JSON per cell (cached — reruns skip completed cells).
+
+NOTE: the XLA_FLAGS assignment below MUST run before any other import —
+jax locks the device count on first initialization.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, LM_SHAPES, ShapeSpec, get, shapes_for
+from repro.launch import roofline as rl
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import LM_RULES, use_mesh_rules
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    count_active_params,
+    count_params,
+    init_caches,
+    init_model,
+)
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.train.trainer import TrainConfig, init_state, make_train_step
+
+
+def _abstract(fn, *args):
+    """eval_shape → ShapeDtypeStruct pytree (no allocation)."""
+    return jax.eval_shape(fn, *args)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh,
+    rules=LM_RULES,
+    extra_cfg: Optional[dict] = None,
+    quant: Optional[str] = None,
+):
+    """Lower the cell's step function with full shardings. Returns (lowered,
+    aux) — aux carries chips and MODEL_FLOPS for the roofline.
+
+    quant: None | "da_bitplane" | "da_lut" | "int8" — serve the DA-frozen
+    model (the paper's technique inside the distributed serving graph)."""
+    if extra_cfg:
+        cfg = dataclasses.replace(cfg, **extra_cfg)
+    chips = mesh.size
+    n_params = count_params(cfg)
+    n_active = count_active_params(cfg)
+    mf = rl.model_flops(cfg, shape, n_params, n_active)
+    aux = {
+        "chips": chips,
+        "model_flops": mf,
+        "n_params": n_params,
+        "n_active": n_active,
+    }
+
+    with use_mesh_rules(mesh, rules):
+        if shape.kind == "train":
+            tcfg = TrainConfig()
+            state_shape = _abstract(
+                lambda: init_state(jax.random.key(0), cfg)
+            )
+            state_specs = SP.tree_pspecs(state_shape)
+            batch = SP.batch_specs(cfg, shape)
+            batch_specs_ = SP.batch_pspecs(batch)
+            step = make_train_step(cfg, tcfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_ns(mesh, state_specs), _ns(mesh, batch_specs_)),
+                out_shardings=(_ns(mesh, state_specs), None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_shape, batch)
+        else:
+            if quant:
+                from repro.core.da import DAConfig
+                from repro.serve.quantize import freeze_model_da
+
+                params_shape = _abstract(
+                    lambda: freeze_model_da(
+                        init_model(jax.random.key(0), cfg),
+                        DAConfig(x_signed=True),
+                        mode=quant,
+                    )
+                )
+            else:
+                params_shape = _abstract(
+                    lambda: init_model(jax.random.key(0), cfg)
+                )
+            param_specs = SP.tree_pspecs(params_shape)
+            max_len = shape.seq_len
+            caches_shape = _abstract(
+                lambda: init_caches(cfg, shape.global_batch, max_len, cfg.dtype())
+            )
+            cache_specs = SP.cache_pspecs(caches_shape)
+            if shape.kind == "prefill":
+                fn = make_prefill_step(cfg)
+                tok, pos = SP.prefill_specs(cfg, shape)
+            else:
+                fn = make_serve_step(cfg)
+                tok, pos = SP.decode_specs(cfg, shape)
+            from repro.launch import sharding as shd
+
+            tok_spec = shd.pspec(("batch", "seq", "embed")[: tok.ndim], tok.shape)
+            pos_spec = shd.pspec(("batch", None, None)[: pos.ndim], pos.shape)
+            # pin the logits sharding: leaving it to XLA makes the GSPMD
+            # strategy (and hence probe costs) unstable across probe compiles
+            logits_spec = shd.pspec(("batch", "vocab"),
+                                    (shape.global_batch, cfg.vocab))
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    _ns(mesh, param_specs),
+                    _ns(mesh, cache_specs),
+                    NamedSharding(mesh, tok_spec),
+                    NamedSharding(mesh, pos_spec),
+                ),
+                out_shardings=(NamedSharding(mesh, logits_spec),
+                               _ns(mesh, cache_specs)),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_shape, caches_shape, tok, pos)
+    return lowered, aux
+
+
+def _cost_of(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = rl.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(sum(coll.values())),
+        "coll_by_kind": coll,
+    }
+
+
+def probe_costs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules,
+                extra_cfg: Optional[dict], quant: Optional[str] = None) -> dict:
+    """Trip-count-corrected per-chip costs.
+
+    HloCostAnalysis counts while-loop (scan) bodies ONCE; every per-layer
+    cost is affine in the period count, so two fully-unrolled probes recover
+    exact totals. Probe points are 2 and 3 periods — a 1-period compile can
+    trigger degenerate GSPMD strategies that corrupt the slope:
+        cost(P) = c2 + (P−2) · (c3 − c2).
+    """
+    period = cfg.period
+    ks = (2, 3)
+    probes = []
+    for k in ks:
+        extra = dict(extra_cfg or {})
+        extra.update(n_layers=k * period, scan_unroll=True)
+        lowered, _ = lower_cell(cfg, shape, mesh, rules=rules, extra_cfg=extra,
+                                quant=quant)
+        probes.append(_cost_of(lowered.compile()))
+    p = cfg.n_layers // period
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        c2, c4 = probes[0][key], probes[1][key]
+        out[key] = c2 + (p - ks[0]) * (c4 - c2) / (ks[1] - ks[0])
+    out["probe_1"] = probes[0]
+    out["probe_2"] = probes[1]
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: Optional[str] = None,
+    extra_cfg: Optional[dict] = None,
+    tag: str = "",
+    rules=LM_RULES,
+    skip_full: bool = False,
+    do_probes: bool = True,
+    quant: Optional[str] = None,
+) -> dict:
+    cfg = get(arch)
+    shape = next(s for s in LM_SHAPES if s.name == shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = os.path.join(out_dir, cell_id + ".json") if out_dir else None
+    if out_path and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    record = {"cell": cell_id, "arch": arch, "shape": shape_name,
+              "mesh": mesh_name, "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        aux = None
+        if not skip_full:
+            # 1) full-config compile: proves the sharding config is coherent
+            #    and yields the memory analysis.
+            lowered, aux = lower_cell(cfg, shape, mesh, rules=rules,
+                                      extra_cfg=extra_cfg, quant=quant)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            raw = _cost_of(compiled)
+            record.update(
+                memory={
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "alias_bytes": mem.alias_size_in_bytes,
+                },
+                raw_full_cost=raw,
+            )
+        # 2) trip-count-corrected cost probes → the roofline terms.
+        if not do_probes:
+            record.update(ok=True,
+                          lower_compile_s=round(time.time() - t0, 1),
+                          n_params=aux["n_params"], n_active=aux["n_active"])
+            if out_path:
+                os.makedirs(out_dir, exist_ok=True)
+                with open(out_path, "w") as f:
+                    json.dump(record, f, indent=1)
+            return record
+        costs = probe_costs(cfg, shape, mesh, rules, extra_cfg, quant=quant)
+        if aux is None:
+            ecfg = dataclasses.replace(cfg, **(extra_cfg or {}))
+            aux = {
+                "chips": mesh.size,
+                "model_flops": rl.model_flops(
+                    ecfg, shape, count_params(ecfg), count_active_params(ecfg)
+                ),
+                "n_params": count_params(ecfg),
+                "n_active": count_active_params(ecfg),
+            }
+        roof = rl.Roofline(
+            flops_per_chip=costs["flops"],
+            bytes_per_chip=costs["bytes"],
+            coll_bytes_per_chip=costs["coll"],
+            chips=aux["chips"],
+            model_flops_global=aux["model_flops"],
+        )
+        record.update(
+            ok=True,
+            lower_compile_s=round(time.time() - t0, 1),
+            n_params=aux["n_params"],
+            n_active=aux["n_active"],
+            probes={k: costs[k] for k in ("probe_1", "probe_2")},
+            roofline=roof.as_dict(),
+        )
+    except Exception as e:  # the dry-run's job is to surface these
+        record.update(error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:],
+                      lower_compile_s=round(time.time() - t0, 1))
+    if out_path:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch, cfg in sorted(ARCHS.items()):
+            for s in shapes_for(cfg):
+                for mp in meshes:
+                    cells.append((arch, s.name, mp))
+    else:
+        assert args.arch and args.shape
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    n_ok = 0
+    for arch, shape_name, mp in cells:
+        # multi-pod cells prove compile coherence; the roofline table (probe
+        # costs) is single-pod per EXPERIMENTS.md §Roofline.
+        rec = run_cell(arch, shape_name, mp, out_dir=args.out,
+                       do_probes=not mp)
+        ok = rec.get("ok")
+        n_ok += bool(ok)
+        r = rec.get("roofline", {})
+        print(
+            f"{rec['cell']:64s} ok={ok} "
+            f"t_c={r.get('t_compute_s', 0):.3e} t_m={r.get('t_memory_s', 0):.3e} "
+            f"t_coll={r.get('t_collective_s', 0):.3e} "
+            f"bottleneck={r.get('bottleneck', '-'):10s} "
+            f"frac={r.get('roofline_fraction', 0):.3f}",
+            flush=True,
+        )
+        if not ok:
+            print("   ERROR:", rec.get("error"), flush=True)
+    print(f"\n{n_ok}/{len(cells)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

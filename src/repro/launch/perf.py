@@ -1,0 +1,141 @@
+"""§Perf hillclimbing driver.
+
+Lowers a (arch × shape) cell with a named variant (a set of config levers /
+DA quant mode), computes the trip-count-corrected roofline, and appends the
+before/after record to artifacts/perf/. Also offers an HLO diagnosis mode
+that prints the top collectives / op-kind byte breakdown of a probe compile.
+
+  python -m repro.launch.perf --arch mistral-nemo-12b --shape prefill_32k \
+      --variant L3_additive_bf16
+  python -m repro.launch.perf --arch mistral-nemo-12b --shape prefill_32k \
+      --diagnose
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+
+# Named §Perf variants: config levers (+ optional quant) per experiment.
+VARIANTS = {
+    "baseline": dict(extra={}, quant=None),
+    # L2: slice hidden state before the LM head in prefill
+    "L2_last_only": dict(extra={"prefill_last_only": True}, quant=None),
+    # L3: additive mask (one fused pass) + bf16 score pipeline
+    "L3_additive": dict(extra={"attn_mask_mode": "additive"}, quant=None),
+    "L3_additive_bf16": dict(
+        extra={"attn_mask_mode": "additive", "softmax_dtype": "bfloat16"},
+        quant=None,
+    ),
+    # L4: sort-based MoE dispatch
+    "L4_sorted_moe": dict(extra={"moe_impl": "sorted"}, quant=None),
+    "L4_sorted_small_groups": dict(
+        extra={"moe_impl": "sorted", "moe_group_size": 256}, quant=None
+    ),
+    # L5: remat policy saving matmul outputs (train)
+    "L5_remat_dots": dict(extra={"remat_policy": "dots"}, quant=None),
+    # L8: structurally-lean attention (minimal score-tensor passes)
+    "L8_lean_attn": dict(extra={"attn_impl": "lean"}, quant=None),
+    # L9: uniform-position KV-cache write via dynamic_update_slice
+    "L9_cache_slice": dict(extra={"cache_mode": "slice"}, quant=None),
+    "L89_lean_slice": dict(
+        extra={"attn_impl": "lean", "cache_mode": "slice"}, quant=None),
+    "DA_stacked_slice": dict(
+        extra={"cache_mode": "slice"}, quant="da_bitplane_stacked"),
+    # L6: flash-style chunked attention for long prefill
+    "L6_chunked_attn": dict(extra={"attn_chunk_q": 2048}, quant=None),
+    # DA-quantized serving (the paper's technique in the serving graph)
+    "DA_bitplane": dict(extra={}, quant="da_bitplane"),       # faithful serial
+    "DA_stacked": dict(extra={}, quant="da_bitplane_stacked"),  # L7: one dot
+    "DA_int8": dict(extra={}, quant="int8"),
+    "DA_stacked_combo": dict(
+        extra={"attn_mask_mode": "additive", "softmax_dtype": "bfloat16"},
+        quant="da_bitplane_stacked",
+    ),
+    # combos
+    "combo_serve": dict(
+        extra={"attn_mask_mode": "additive", "softmax_dtype": "bfloat16",
+               "prefill_last_only": True},
+        quant=None,
+    ),
+    "combo_moe_serve": dict(
+        extra={"attn_mask_mode": "additive", "softmax_dtype": "bfloat16",
+               "moe_impl": "sorted"},
+        quant=None,
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default=None, choices=sorted(VARIANTS))
+    ap.add_argument("--extra", default=None,
+                    help="JSON dict of raw config overrides")
+    ap.add_argument("--quant", default=None)
+    ap.add_argument("--diagnose", action="store_true")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="use FSDP_RULES (2-D weight sharding over data+model)")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the full compile (memory analysis)")
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+
+    from repro.configs.registry import LM_SHAPES, get
+    from repro.launch.dryrun import lower_cell, run_cell, _cost_of
+    from repro.launch.mesh import make_production_mesh
+
+    if args.diagnose:
+        import dataclasses
+
+        from repro.launch.hlo_tools import bytes_by_op_kind, top_collectives
+
+        cfg = get(args.arch)
+        shape = next(s for s in LM_SHAPES if s.name == args.shape)
+        mesh = make_production_mesh()
+        extra = json.loads(args.extra) if args.extra else {}
+        extra.update(n_layers=2 * cfg.period, scan_unroll=True)
+        lowered, _ = lower_cell(cfg, shape, mesh, extra_cfg=extra,
+                                quant=args.quant)
+        txt = lowered.compile().as_text()
+        print("== top collectives (2-period probe, per-chip result bytes) ==")
+        for name, kind, b in top_collectives(txt):
+            print(f"  {b/1e9:9.3f} GB  {kind:20s} {name}")
+        print("== result bytes by op kind ==")
+        for kind, b, n in bytes_by_op_kind(txt):
+            print(f"  {b/1e9:9.3f} GB  n={n:5d}  {kind}")
+        return
+
+    assert args.variant or args.extra
+    if args.variant:
+        v = VARIANTS[args.variant]
+        extra, quant = dict(v["extra"]), v["quant"]
+        tag = args.variant
+    else:
+        extra, quant = json.loads(args.extra), args.quant
+        tag = "custom"
+    from repro.launch.sharding import FSDP_RULES, LM_RULES
+
+    rules = FSDP_RULES if args.fsdp else LM_RULES
+    if args.fsdp:
+        tag = tag + "_fsdp"
+    rec = run_cell(args.arch, args.shape, multi_pod=False, out_dir=args.out,
+                   extra_cfg=extra, tag=tag, skip_full=not args.full,
+                   quant=quant, rules=rules)
+    r = rec.get("roofline", {})
+    print(json.dumps({k: r.get(k) for k in (
+        "t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+        "useful_flops_fraction", "roofline_fraction")}, indent=1))
+    if rec.get("memory"):
+        print("memory:", json.dumps(rec["memory"]))
+    if not rec.get("ok"):
+        print("ERROR:", rec.get("error"))
+
+
+if __name__ == "__main__":
+    main()

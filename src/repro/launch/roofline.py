@@ -1,0 +1,156 @@
+"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §5).
+
+  compute    = HLO_FLOPs   / (chips · 197 TFLOP/s bf16)
+  memory     = HLO_bytes   / (chips · 819 GB/s HBM)
+  collective = coll_bytes  / (chips · 50 GB/s/link ICI)
+
+``cost_analysis()`` supplies flops / bytes accessed for the *per-partition*
+SPMD module; collective bytes are not in cost_analysis — we parse the
+optimized HLO and sum the result-shape payload of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op. All terms
+are reported as *per-chip seconds per step*, so the dominant term is directly
+the step-time lower bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO text.
+
+    ``-start`` ops are counted, matching ``-done`` twins are not (the pair
+    describes one transfer)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        if "-done" in line.split("=", 1)[1].split("(")[0]:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    chips: int
+    model_flops_global: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global) — remat/redundancy waste check."""
+        hlo_global = self.flops_per_chip * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the step-time bound: the score.
+
+        = (MODEL_FLOPS / chips / PEAK) / max(t_c, t_m, t_coll)."""
+        t_useful = self.model_flops_global / self.chips / PEAK_FLOPS
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D prefill, 2·N·B decode (N = active)."""
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per row
+
+
+def from_compiled(compiled, chips: int, model_flops_global: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = sum(collective_bytes(compiled.as_text()).values())
+    return Roofline(
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        coll_bytes_per_chip=float(coll),
+        chips=chips,
+        model_flops_global=model_flops_global,
+    )

@@ -1,0 +1,65 @@
+"""Serving launcher: batched continuous-batching engine, optional DA mode.
+
+  python -m repro.launch.serve --arch qwen3-8b --smoke --quant da8 \
+      --requests 16 --batch 4
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "int8", "da8", "da8-lut"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import ARCHS, reduce_for_smoke
+    from repro.core.da import DAConfig
+    from repro.models.model import count_params, init_model
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.quantize import da_memory_report, freeze_model_da
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    cfg = dataclasses.replace(cfg, moe_dropless=True)
+    if cfg.modality != "text":
+        raise SystemExit(f"{cfg.name} has a stub frontend; serve text archs")
+
+    params = init_model(jax.random.key(0), cfg)
+    print(f"arch={cfg.name} params={count_params(cfg)/1e6:.1f}M quant={args.quant}")
+    if args.quant != "none":
+        mode = {"int8": "int8", "da8": "da_bitplane", "da8-lut": "da_lut"}[args.quant]
+        params = freeze_model_da(params, DAConfig(x_signed=True), mode=mode)
+        rep = da_memory_report(params)
+        print(f"pre-VMM freeze: {rep['da_matrices']} matrices"
+              + (f", LUT blow-up {rep['cell_blowup']:.0f}x"
+                 if rep["lut_cells"] else ""))
+
+    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for uid in range(args.requests):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab, rng.integers(4, 32)),
+                           max_new_tokens=args.max_new))
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done.values())
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

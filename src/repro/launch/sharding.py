@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules (GSPMD) with divisibility fallback.
+
+Activations and parameters are annotated with *logical* axis names; a rules
+table maps logical names → mesh axes. A logical axis is only sharded when the
+dimension is divisible by the mapped mesh-axis extent — otherwise it silently
+falls back to replication (the safe default that keeps every (arch × shape)
+cell compilable; e.g. 8 GQA kv-heads on a 16-way model axis replicate).
+
+Usage::
+
+    with use_mesh_rules(mesh, LM_RULES):
+        y = constrain(y, ("batch", "seq", "ffn"))
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# Default logical→mesh mapping for the LM family. "pod" exists only in the
+# multi-pod mesh; missing mesh axes are dropped automatically.
+LM_RULES: Mapping[str, AxisName] = {
+    "batch": ("pod", "data"),
+    "seq": None,               # sequence replicated in train fwd (SP optional)
+    "seq_sp": ("data",),       # sequence-parallel variant (long prefill)
+    "embed": None,
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ffn": ("model",),
+    "expert": ("model",),
+    "expert_ffn": None,
+    "inner": ("model",),       # mamba inner channels
+    "ssm_heads": ("model",),
+    "state": None,
+    "kv_seq": ("model",),      # decode KV-cache sequence axis (seq-parallel KV)
+    "lut_addr": None,
+    "groups": None,
+}
+
+# FSDP/ZeRO-3-style 2-D weight sharding: the "embed" logical axis (the
+# d_model dim of every weight and the fp32 optimizer mirrors) additionally
+# shards over the data axes, so parameters + optimizer state scale with the
+# FULL chip count instead of the model axis alone (a 398B model's fp32
+# optimizer state does not fit 256 chips otherwise). GSPMD inserts the
+# FSDP all-gather before each use automatically.
+FSDP_RULES: Mapping[str, AxisName] = {**LM_RULES, "embed": ("data",)}
+
+_LOCAL = threading.local()
+
+
+def _active() -> Optional[Tuple[Mesh, Mapping[str, AxisName]]]:
+    return getattr(_LOCAL, "mesh_rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: Mapping[str, AxisName] = LM_RULES):
+    prev = _active()
+    _LOCAL.mesh_rules = (mesh, dict(rules))
+    try:
+        with mesh:
+            yield
+    finally:
+        _LOCAL.mesh_rules = prev
+
+
+def _resolve(logical: str, dim: int, mesh: Mesh, rules, used: set) -> AxisName:
+    axes = rules.get(logical)
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    # Drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh)
+    # or are already consumed by another dimension of this tensor.
+    axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+    if not axes:
+        return None
+    extent = 1
+    for a in axes:
+        extent *= mesh.shape[a]
+    if dim % extent != 0:
+        return None  # divisibility fallback → replicate
+    used.update(axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def pspec(logical_axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+    """PartitionSpec for the active mesh/rules; fully replicated if none.
+
+    Dims are assigned right-to-left (minor dims get priority for the model
+    axis — e.g. a KV cache [B, S, KV, hd] shards KV heads when divisible,
+    else falls back to sequence-sharding S) and each mesh axis is used at
+    most once per tensor."""
+    act = _active()
+    if act is None:
+        return P()
+    mesh, rules = act
+    used: set = set()
+    parts: list = [None] * len(logical_axes)
+    for i in range(len(logical_axes) - 1, -1, -1):
+        name, dim = logical_axes[i], shape[i]
+        if name is not None:
+            parts[i] = _resolve(name, dim, mesh, rules, used)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op without a mesh."""
+    act = _active()
+    if act is None:
+        return x
+    mesh, _ = act
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = pspec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]], shape) -> Optional[NamedSharding]:
+    act = _active()
+    if act is None:
+        return None
+    mesh, _ = act
+    return NamedSharding(mesh, pspec(logical_axes, shape))

@@ -1,0 +1,172 @@
+"""Abstract input specs (ShapeDtypeStruct) and parameter PartitionSpecs.
+
+``input_specs`` builds weak-type-correct, shardable stand-ins for every model
+input — no device allocation; the dry-run lowers against these.
+
+``state_pspecs`` / ``cache_pspecs`` map every parameter / cache leaf to a
+PartitionSpec through the logical-axis rules (launch/sharding.py), including
+the leading stacked-periods axis. Leaf names → logical axes:
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec
+from repro.launch import sharding as shd
+from repro.models.config import ModelConfig
+
+# leaf name → logical axes, keyed by (name, ndim-without-stacking)
+PARAM_LOGICAL: Dict[Tuple[str, int], Tuple[Optional[str], ...]] = {
+    ("table", 2): ("vocab", "embed"),
+    ("w", 2): ("embed", "vocab"),            # lm head
+    ("wq", 2): ("embed", "heads"),
+    ("wk", 2): ("embed", "heads"),           # flat kv dim (divisible even
+    ("wv", 2): ("embed", "heads"),           #  when the kv-head count isn't)
+    ("wo", 2): ("heads", "embed"),
+    ("bq", 1): ("heads",),
+    ("bk", 1): ("heads",),
+    ("bv", 1): ("heads",),
+    ("w_up", 2): ("embed", "ffn"),
+    ("w_gate", 2): ("embed", "ffn"),
+    ("w_down", 2): ("ffn", "embed"),
+    ("w_up", 3): ("expert", "embed", "expert_ffn"),
+    ("w_gate", 3): ("expert", "embed", "expert_ffn"),
+    ("w_down", 3): ("expert", "expert_ffn", "embed"),
+    ("router", 2): ("embed", "expert"),
+    ("in_proj", 2): ("embed", "inner"),
+    ("out_proj", 2): ("inner", "embed"),
+    ("conv_w", 2): (None, "inner"),
+}
+
+
+DA_FIELDS = ("wq", "w_scale", "luts")
+
+
+def _leaf_logical(path_names, shape) -> Tuple[Optional[str], ...]:
+    name = path_names[-1]
+    stacked = "periods" in path_names
+    ndim = len(shape) - (1 if stacked else 0)
+    if name in DA_FIELDS and len(path_names) >= 2:
+        # DA-frozen linear: shard each artifact like the weight it derives
+        # from. wq matches the parent weight's logical axes; the per-column
+        # scale and the [.., G, 2^L, N] LUTs inherit only the output axis.
+        parent = path_names[-2]
+        base_ndim = ndim if name in ("wq", "w_scale") else ndim - 1
+        base = PARAM_LOGICAL.get((parent, base_ndim))
+        if base is not None:
+            lead = base[:-2] if len(base) > 2 else ()
+            out_ax = base[-1]
+            if name == "wq":
+                logical = base
+            elif name == "w_scale":
+                logical = lead + (None, out_ax)
+            else:  # luts [.., G, 2^L, N]
+                logical = lead + (None, "lut_addr", out_ax)
+            if stacked:
+                logical = (None,) + logical
+            return logical
+    logical = PARAM_LOGICAL.get((name, ndim), (None,) * ndim)
+    if stacked:
+        logical = (None,) + logical
+    return logical
+
+
+def _entry_name(entry) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def tree_pspecs(tree: Any) -> Any:
+    """PartitionSpec tree mirroring ``tree`` (under active mesh rules)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        names = [_entry_name(p) for p in path]
+        logical = _leaf_logical(names, leaf.shape)
+        specs.append(shd.pspec(logical, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+CACHE_LOGICAL = {
+    "k": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+    "length": (None,),
+    "conv": (None, "batch", None, "inner"),
+    "ssm": (None, "batch", "ssm_heads", None, None),
+}
+
+
+def cache_pspecs(caches: Any) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    specs = []
+    for path, leaf in flat:
+        name = _entry_name(path[-1])
+        logical = CACHE_LOGICAL.get(name, (None,) * leaf.ndim)
+        specs.append(shd.pspec(logical, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract train batch: tokens or stub embeddings + labels."""
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.modality == "text":
+        inputs = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    else:  # [audio]/[vlm]: precomputed frame/patch embeddings (frontend stub)
+        inputs = jax.ShapeDtypeStruct((b, t, cfg.d_model), jnp.bfloat16)
+    out = {"inputs": inputs, "labels": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+    if cfg.mrope_sections:
+        out["positions"] = jax.ShapeDtypeStruct((b, t, 3), jnp.int32)
+    return out
+
+
+BATCH_LOGICAL = {
+    "inputs": ("batch", "seq", "embed"),
+    "labels": ("batch", "seq"),
+    "positions": ("batch", "seq", None),
+}
+
+
+def batch_pspecs(batch: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, P]:
+    out = {}
+    for k, v in batch.items():
+        logical = BATCH_LOGICAL[k][: v.ndim]
+        out[k] = shd.pspec(logical, v.shape)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract decode inputs: one new token per row + positions."""
+    b = shape.global_batch
+    if cfg.modality == "text":
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+    pos_shape = (b, 1, 3) if cfg.mrope_sections else (b, 1)
+    return tok, jax.ShapeDtypeStruct(pos_shape, jnp.int32)
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.modality == "text":
+        tok = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((b, t, cfg.d_model), jnp.bfloat16)
+    pos_shape = (b, t, 3) if cfg.mrope_sections else (b, t)
+    return tok, jax.ShapeDtypeStruct(pos_shape, jnp.int32)
+
+
+def shardings_of(specs_tree: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,101 @@
+"""Distributed training launcher.
+
+  python -m repro.launch.train --arch qwen3-8b --steps 100 \
+      --mesh 2x2 --axes data,model --batch 32 --seq 512
+
+On real hardware the mesh comes from the TPU topology (jax.devices()); on
+this CPU container pass --fake-devices N to request placeholder devices
+(must be the first thing the process does — handled below before jax import).
+Fault tolerance: --ckpt-dir enables async checkpoints + crash resume.
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--mesh", default="1x1", help="e.g. 16x16 or 2x16x16")
+    ap.add_argument("--axes", default="data,model")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config for the arch")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--fake-devices", type=int, default=0)
+    return ap.parse_args()
+
+
+def main():
+    args = _parse()
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.fake_devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.registry import ARCHS, reduce_for_smoke
+    from repro.data.pipeline import batch_at, for_model
+    from repro.launch import specs as SP
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.sharding import use_mesh_rules
+    from repro.models.model import count_params
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import TrainConfig, Trainer, init_state
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    print(f"arch={cfg.name} params={count_params(cfg)/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    shape = tuple(int(x) for x in args.mesh.split("x"))
+    axes = tuple(args.axes.split(","))
+    assert len(shape) == len(axes)
+    mesh = make_test_mesh(shape, axes)
+
+    dc = for_model(cfg, seq_len=args.seq, global_batch=args.batch, packed=True)
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=args.lr),
+        total_steps=args.steps,
+        microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+    )
+
+    with use_mesh_rules(mesh):
+        state = init_state(jax.random.key(0), cfg)
+        sspec = SP.tree_pspecs(state)
+        to_ns = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        state = jax.device_put(state, to_ns(sspec))
+
+        def data_fn(step):
+            batch = jax.tree.map(jnp.asarray, batch_at(dc, step))
+            bspec = SP.batch_pspecs(batch)
+            return jax.device_put(batch, to_ns(bspec))
+
+        trainer = Trainer(cfg, tcfg, data_fn)
+        state, hist = trainer.run(state, args.steps)
+
+    for h in hist[:: max(1, len(hist) // 20)]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.2f} {h['time_s']*1e3:.0f} ms"
+              + (" STRAGGLER" if h.get("straggler") else ""))
+    if trainer.monitor.flagged:
+        print(f"stragglers flagged: {trainer.monitor.flagged}")
+    print(f"done at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""GQA attention with RoPE/M-RoPE, qk-norm, KV cache, flash-style chunking."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import dense
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rms_norm_headwise, rope_angles
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Static-shape decode cache. k/v: [B, S_max, n_kv, hd]; length: scalar."""
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # int32 tokens already written
+
+    @staticmethod
+    def zeros(cfg: ModelConfig, batch: int, max_len: int, dtype):
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        return KVCache(
+            k=jnp.zeros(shape, dtype=dtype),
+            v=jnp.zeros(shape, dtype=dtype),
+            length=jnp.zeros((), dtype=jnp.int32),
+        )
+
+
+def init_attention(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype()
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    s = 1.0 / (d ** 0.5)
+    so = 1.0 / (qd ** 0.5)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, qd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, kvd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, kvd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (qd, d)) * so).astype(dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((qd,), dtype=dt)
+        p["bk"] = jnp.zeros((kvd,), dtype=dt)
+        p["bv"] = jnp.zeros((kvd,), dtype=dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim_,), dtype=dt)
+        p["k_norm"] = jnp.ones((cfg.head_dim_,), dtype=dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    b, t, _ = x.shape
+    hd = cfg.head_dim_
+    q = dense(x, p["wq"]) + (p.get("bq", 0))
+    k = dense(x, p["wk"]) + (p.get("bk", 0))
+    v = dense(x, p["wv"]) + (p.get("bv", 0))
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm_headwise(k, p["k_norm"], cfg.norm_eps)
+    ang = rope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    q = apply_rope(q, ang)
+    k = apply_rope(k, ang)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads: int):
+    """[B,S,Kv,hd] → [B,S,H,hd]. Materializing full heads keeps the score
+    tensor [B,H,T,S] cleanly shardable on the 16-way model axis (H divides;
+    the raw kv-head count usually doesn't) — train/prefill only; decode keeps
+    the grouped form to avoid inflating KV-cache reads."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def _gqa_scores(q, k):
+    """q: [B,T,H,hd], k: [B,S,Kv,hd] → scores [B,Kv,G,T,S] (H = Kv·G)."""
+    b, t, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, t, kv, g, hd)
+    return jnp.einsum("btkgd,bskd->bkgts", qg, k) / (hd ** 0.5)
+
+
+def _gqa_out(probs, v):
+    """probs: [B,Kv,G,T,S], v: [B,S,Kv,hd] → [B,T,H,hd]."""
+    b, kv, g, t, s = probs.shape
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, t, kv * g, v.shape[-1])
+
+
+def _apply_mask_softmax(scores, mask, cfg: ModelConfig):
+    """Mask + softmax with the configured §Perf levers.
+
+    L3a additive: one fused add of a ±0/−inf bias instead of compare+select
+    (one fewer full-tensor pass, no bool materialization).
+    L3b softmax_dtype: bf16 score pipeline halves every pass's bytes; the
+    row-max subtraction keeps it stable (|exp arg| ≤ ~40 in bf16)."""
+    sd = jnp.dtype(cfg.softmax_dtype)
+    scores = scores.astype(sd)
+    if cfg.attn_mask_mode == "additive":
+        bias = jnp.where(mask, jnp.array(0.0, sd), jnp.array(NEG_INF, sd))
+        scores = scores + bias
+    else:
+        scores = jnp.where(mask, scores, jnp.array(NEG_INF, sd))
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def _decode_attention(q, k, v, mask, cfg: ModelConfig):
+    """Grouped GQA attention over the cache (decode: T small)."""
+    scores = _gqa_scores(q, k)
+    probs = _apply_mask_softmax(scores, mask[:, None, None], cfg).astype(q.dtype)
+    return _gqa_out(probs, v)
+
+
+def _naive_attention(q, k, v, mask, cfg: ModelConfig):
+    """Full-head attention. q [B,T,H,hd], k/v [B,S,Kv,hd]; mask [..,T,S]."""
+    h, hd = q.shape[2], q.shape[3]
+    kf = _repeat_kv(k, h)
+    vf = _repeat_kv(v, h)
+    scores = jnp.einsum("bthd,bshd->bhts", q, kf) / (hd ** 0.5)
+    probs = _apply_mask_softmax(scores, mask, cfg).astype(q.dtype)
+    return jnp.einsum("bhts,bshd->bthd", probs, vf)
+
+
+def causal_bias(t: int, dtype=jnp.float32) -> jax.Array:
+    """Additive causal bias [T, T], built ONCE per step (L8): inside the
+    layer scan GSPMD re-materializes it with a 4 GB all-gather per layer;
+    hoisted, it is computed/gathered once and reused by every layer."""
+    pos = jnp.arange(t)
+    bias = jnp.where(pos[None, :] <= pos[:, None], 0.0, NEG_INF)
+    return constrain(bias.astype(dtype), (None, None))
+
+
+def _lean_attention(q, k, v, cfg: ModelConfig, bias):
+    """§Perf lever L8: structurally minimal causal attention.
+
+      * pre-scales q (the 1/√d multiply lands on the small [B,T,H,hd] tensor),
+      * ONE hoisted additive causal bias (no per-layer mask construction),
+      * max/sub-exp/sum,
+      * the 1/l normalization lands on the [B,T,H,hd] *output* (S× smaller).
+    """
+    h, hd = q.shape[2], q.shape[3]
+    kf = _repeat_kv(k, h)
+    vf = _repeat_kv(v, h)
+    qs = (q * (hd ** -0.5)).astype(q.dtype)
+    scores = jnp.einsum("bthd,bshd->bhts", qs, kf).astype(jnp.float32)
+    scores = scores + bias[None, None]
+    m = jnp.max(scores, axis=-1)
+    p = jnp.exp(scores - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", p.astype(q.dtype), vf)
+    return o / l.transpose(0, 2, 1)[..., None].astype(o.dtype)
+
+
+def _chunked_attention(q, k, v, q_offset: int, chunk: int, unroll: bool = False):
+    """Flash-style online-softmax over KV chunks (pure JAX, differentiable).
+
+    Causal: query at absolute position q_offset+i attends to kv ≤ that pos.
+    Full-head form (kv repeated) so every tensor shards on the heads axis.
+    """
+    b, t, h, hd = q.shape
+    kf = _repeat_kv(k, h)
+    vf = _repeat_kv(v, h)
+    s = kf.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = kf.shape[1] // chunk
+    kc = kf.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = vf.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(t)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, kb, vb = xs
+        kpos = ci * chunk + jnp.arange(chunk)
+        sc = jnp.einsum("bthd,bshd->bhts", q, kb).astype(jnp.float32)
+        sc = sc / (hd ** 0.5)
+        valid = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < s)
+        sc = jnp.where(valid[None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhts,bshd->bhtd", p.astype(q.dtype), vb)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, t), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, h, t), dtype=jnp.float32)
+    a0 = jnp.zeros((b, h, t, hd), dtype=q.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc),
+        unroll=n_chunks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-20)[..., None].astype(acc.dtype)
+    return out.transpose(0, 2, 1, 3)  # [B,T,H,hd]
+
+
+def attention_forward(
+    p,
+    x,
+    cfg: ModelConfig,
+    positions,
+    cache: Optional[KVCache] = None,
+    update_cache: bool = False,
+    attn_bias: Optional[jax.Array] = None,
+):
+    """Train fwd (cache=None), prefill (update_cache), or decode (T small,
+    cache holds the past). Returns (y, new_cache)."""
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    new_cache = None
+    if cache is not None:
+        # Position-driven cache writes: each batch row writes its own segment
+        # (continuous batching → ragged per-slot lengths). positions[..., 0]
+        # is the temporal coordinate under M-RoPE.
+        tpos = positions[..., 0] if positions.ndim == 3 else positions  # [B,T]
+        if cfg.cache_mode == "slice":
+            # L9: uniform positions — dynamic_update_slice at a scalar start
+            # is GSPMD-local; the per-row scatter below makes the partitioner
+            # all-gather the full-batch update per layer.
+            start = tpos[0, 0]
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, start, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, start, 0, 0)
+            )
+        else:
+            b_idx = jnp.arange(b)[:, None]
+            ck = cache.k.at[b_idx, tpos].set(k.astype(cache.k.dtype))
+            cv = cache.v.at[b_idx, tpos].set(v.astype(cache.v.dtype))
+        ck = constrain(ck, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        cv = constrain(cv, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        new_cache = KVCache(k=ck, v=cv, length=cache.length + t)
+        if update_cache and t > 1:
+            # prefill: attend within the fresh segment only (cache was empty)
+            pass
+        else:
+            # decode: attend over the whole cache with a per-row length mask
+            s = ck.shape[1]
+            kpos = jnp.arange(s)
+            mask = kpos[None, None, :] <= tpos[:, :, None]  # [B,T,S]
+            y = _decode_attention(q, ck, cv, mask, cfg)
+            y = dense(y.reshape(b, t, cfg.q_dim), p["wo"])
+            return constrain(y, ("batch", "seq", "embed")), new_cache
+
+    # train / prefill self-attention over the current segment
+    if cfg.attn_impl == "lean":
+        bias = attn_bias if attn_bias is not None else causal_bias(t)
+        y = _lean_attention(q, k, v, cfg, bias)
+    elif cfg.attn_chunk_q and t > cfg.attn_chunk_q:
+        y = _chunked_attention(
+            q, k, v, q_offset=0, chunk=cfg.attn_chunk_q, unroll=cfg.scan_unroll
+        )
+    else:
+        tpos_c = jnp.arange(t)
+        mask = (tpos_c[None, :] <= tpos_c[:, None])[None, None]  # [1,1,T,S]
+        y = _naive_attention(q, k, v, mask, cfg)
+    y = dense(y.reshape(b, t, cfg.q_dim), p["wo"])
+    return constrain(y, ("batch", "seq", "embed")), new_cache

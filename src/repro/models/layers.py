@@ -1,0 +1,134 @@
+"""Shared layers: norms, rotary embeddings (RoPE / M-RoPE), MLP variants."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import dense
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dim: int):
+    p = {"scale": jnp.ones((dim,), dtype=cfg.pdtype())}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype=cfg.pdtype())
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        xf = xf - mu
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(x, scale, eps: float):
+    """Per-head RMS norm over head_dim (qwen3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (1-D RoPE and qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_angles(positions, head_dim: int, theta: float,
+                sections: Optional[tuple] = None):
+    """positions: [B, T] (1-D RoPE) or [B, T, 3] (M-RoPE). → [B, T, hd/2]."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if sections is None:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        return positions.astype(jnp.float32)[..., None] * inv
+    if positions.ndim == 2:  # text-only input: t == h == w (1-D equivalent)
+        positions = jnp.stack([positions] * len(sections), axis=-1)
+    assert positions.ndim == 3 and positions.shape[-1] == len(sections)
+    parts, off = [], 0
+    for i, sec in enumerate(sections):
+        p = positions[..., i].astype(jnp.float32)
+        parts.append(p[..., None] * inv[off : off + sec])
+        off += sec
+    assert off == half, (off, half)
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rope(x, angles):
+    """x: [B, T, H, hd]; angles: [B, T, hd/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU / squared-ReLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype()
+    s_in = 1.0 / (d_model ** 0.5)
+    s_out = 1.0 / (d_ff ** 0.5)
+    p = {
+        "w_up": (jax.random.normal(ks[0], (d_model, d_ff)) * s_in).astype(dt),
+        "w_down": (jax.random.normal(ks[1], (d_ff, d_model)) * s_out).astype(dt),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * s_in).astype(dt)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    up = dense(x, p["w_up"])
+    up = constrain(up, ("batch", "seq", "ffn"))
+    if cfg.mlp_act == "swiglu":
+        gate = dense(x, p["w_gate"])
+        gate = constrain(gate, ("batch", "seq", "ffn"))
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(up)
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(cfg.mlp_act)
+    y = dense(h, p["w_down"])
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig):
+    dt = cfg.pdtype()
+    table = jax.random.normal(key, (cfg.vocab, cfg.d_model)) * 0.02
+    return {"table": table.astype(dt)}
+
+
+def apply_embed(p, tokens):
+    return constrain(jnp.take(p["table"], tokens, axis=0),
+                     ("batch", "seq", "embed"))
+
+
+def init_lm_head(key, cfg: ModelConfig):
+    dt = cfg.pdtype()
+    s = 1.0 / (cfg.d_model ** 0.5)
+    return {"w": (jax.random.normal(key, (cfg.d_model, cfg.vocab)) * s).astype(dt)}
+
+
+def apply_lm_head(p, x):
+    logits = dense(x, p["w"])
+    return constrain(logits, ("batch", "seq", "vocab"))

@@ -1,0 +1,227 @@
+"""Mamba-2 (SSD, state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: intra-chunk quadratic (attention-like) term + an
+inter-chunk state recurrence, so memory stays O(T·Q) instead of O(T·H·P·S).
+Decode is the O(1) single-step recurrence on (conv_state, ssm_state) — this is
+what makes the ssm/hybrid archs runnable at seq 524 288 (long_500k).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import dense
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # [B, conv-1, conv_channels] rolling window
+    ssm: jax.Array   # [B, H, P, S] state
+
+    @staticmethod
+    def zeros(cfg: ModelConfig, batch: int, dtype):
+        return MambaCache(
+            conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.conv_channels), dtype),
+            ssm=jnp.zeros(
+                (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            ),
+        )
+
+
+def init_mamba(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    dt = cfg.pdtype()
+    d = cfg.d_model
+    di, h = cfg.d_inner, cfg.ssm_heads
+    gs = cfg.ssm_groups * cfg.ssm_state
+    proj_out = 2 * di + 2 * gs + h  # z, x, B, C, dt
+    s = 1.0 / (d ** 0.5)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, cfg.conv_channels))
+                   * 0.2).astype(dt),
+        "conv_b": jnp.zeros((cfg.conv_channels,), dtype=dt),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((h,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((h,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype=dt),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) / (di ** 0.5)).astype(dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, gs, h = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * gs]
+    dt = zxbcdt[..., di + di + 2 * gs :]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, cache_conv=None):
+    """Depthwise causal conv over time. xbc: [B,T,C]; w: [K,C]."""
+    k = w.shape[0]
+    if cache_conv is not None:
+        ctx = jnp.concatenate([cache_conv.astype(xbc.dtype), xbc], axis=1)
+    else:
+        ctx = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    new_conv = ctx[:, -(k - 1) :, :] if k > 1 else None
+    windows = [ctx[:, i : i + xbc.shape[1], :] for i in range(k)]
+    y = sum(wi[None, None] * win for wi, win in zip(w, windows)) + b[None, None]
+    return jax.nn.silu(y), new_conv
+
+
+def _gated_norm(y, z, scale, eps):
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return g * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int,
+                init_state: Optional[jax.Array] = None, unroll: bool = False):
+    """Chunked SSD scan.
+
+    x:    [B,T,H,P] (already dt-scaled NOT applied; raw head inputs)
+    dt:   [B,T,H]   (positive step sizes)
+    a:    [H]       (negative decay rates)
+    bmat: [B,T,G,S]; cmat: [B,T,G,S]
+    Returns (y [B,T,H,P], final_state [B,H,P,S]).
+    """
+    btot, t, h, p = x.shape
+    g = bmat.shape[2]
+    rep = h // g
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = t + pad
+    nc = tt // q
+
+    xf = x.astype(jnp.float32).reshape(btot, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(btot, nc, q, h)
+    bf = bmat.astype(jnp.float32).reshape(btot, nc, q, g, 1, bmat.shape[-1])
+    cf = cmat.astype(jnp.float32).reshape(btot, nc, q, g, 1, cmat.shape[-1])
+    bf = jnp.broadcast_to(bf, bf.shape[:3] + (g, rep, bf.shape[-1])).reshape(
+        btot, nc, q, h, -1
+    )
+    cf = jnp.broadcast_to(cf, cf.shape[:3] + (g, rep, cf.shape[-1])).reshape(
+        btot, nc, q, h, -1
+    )
+
+    dta = dtf * a[None, None, None, :]              # [B,C,Q,H] (negative)
+    cs = jnp.cumsum(dta, axis=2)                    # inclusive cumsum
+    total = cs[:, :, -1, :]                         # [B,C,H]
+    dtx = xf * dtf[..., None]                       # dt-scaled inputs
+
+    # intra-chunk: Y_ij = exp(cs_i - cs_j) · (C_i·B_j) · dtx_j   (j ≤ i)
+    li = cs[:, :, :, None, :] - cs[:, :, None, :, :]      # [B,C,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), dtype=bool))
+    # mask BEFORE exp: upper-triangle li is positive (cs is decreasing), and
+    # exp(+big) would poison gradients through the where.
+    li = jnp.where(tri[None, None, :, :, None], li, -jnp.inf)
+    decay = jnp.exp(li)
+    cb = jnp.einsum("bcihs,bcjhs->bcijh", cf, bf)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", cb * decay, dtx)
+
+    # chunk summary states: S_c = Σ_j exp(total − cs_j) dtx_j ⊗ B_j
+    decay_out = jnp.exp(total[:, :, None, :] - cs)         # [B,C,Q,H]
+    s_c = jnp.einsum("bcjh,bcjhp,bcjhs->bchps", decay_out, dtx, bf)
+
+    # inter-chunk recurrence over the (few) chunks
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((btot, h, p, bf.shape[-1]), jnp.float32)
+    )
+
+    def body(carry, xs):
+        tot_c, s_cc = xs  # [B,H], [B,H,P,S]
+        new = carry * jnp.exp(tot_c)[:, :, None, None] + s_cc
+        return new, carry  # emit state at *start* of chunk
+
+    (h_last, h_starts) = jax.lax.scan(
+        body,
+        h0,
+        (total.transpose(1, 0, 2), s_c.transpose(1, 0, 2, 3, 4)),
+        unroll=nc if unroll else 1,
+    )
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)  # [B,C,H,P,S]
+
+    # inter-chunk contribution: C_i · (H_start · exp(cs_i))
+    y_inter = jnp.einsum("bcihs,bchps,bcih->bcihp", cf, h_starts, jnp.exp(cs))
+
+    y = (y_intra + y_inter).reshape(btot, tt, h, p)[:, :t]
+    return y, h_last
+
+
+def ssd_step(state, x, dt, a, bmat, cmat):
+    """Single decode step. state: [B,H,P,S]; x: [B,H,P]; dt: [B,H];
+    bmat/cmat: [B,G,S]. Returns (y [B,H,P], new_state)."""
+    h = x.shape[1]
+    g = bmat.shape[1]
+    rep = h // g
+    bf = jnp.repeat(bmat.astype(jnp.float32), rep, axis=1)  # [B,H,S]
+    cf = jnp.repeat(cmat.astype(jnp.float32), rep, axis=1)
+    dta = jnp.exp(dt.astype(jnp.float32) * a[None, :])      # [B,H]
+    upd = jnp.einsum("bhp,bhs->bhps", x.astype(jnp.float32) * dt[..., None], bf)
+    new_state = state * dta[:, :, None, None] + upd
+    y = jnp.einsum("bhps,bhs->bhp", new_state, cf)
+    return y, new_state
+
+
+def mamba_forward(
+    p,
+    x,
+    cfg: ModelConfig,
+    cache: Optional[MambaCache] = None,
+    update_cache: bool = False,
+) -> Tuple[jax.Array, Optional[MambaCache]]:
+    """Mamba-2 block. Train (cache=None), prefill (update_cache), or decode."""
+    b, t, _ = x.shape
+    h, pdim, s = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = dense(x, p["in_proj"])
+    zxbcdt = constrain(zxbcdt, ("batch", "seq", "inner"))
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+
+    conv_in = cache.conv if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_in)
+    gs = cfg.ssm_groups * cfg.ssm_state
+    xs = xbc[..., : cfg.d_inner]
+    bmat = xbc[..., cfg.d_inner : cfg.d_inner + gs].reshape(
+        b, t, cfg.ssm_groups, s
+    )
+    cmat = xbc[..., cfg.d_inner + gs :].reshape(b, t, cfg.ssm_groups, s)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, t, h, pdim)
+
+    if cache is not None and t == 1 and not update_cache:
+        y1, new_ssm = ssd_step(
+            cache.ssm, xh[:, 0], dt[:, 0], a, bmat[:, 0], cmat[:, 0]
+        )
+        y = y1[:, None]
+    else:
+        init = cache.ssm if cache is not None else None
+        y, new_ssm = ssd_chunked(
+            xh, dt, a, bmat, cmat, cfg.ssm_chunk, init, unroll=cfg.scan_unroll
+        )
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, cfg.d_inner)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps).astype(x.dtype)
+    out = dense(y, p["out_proj"])
+    out = constrain(out, ("batch", "seq", "embed"))
+    new_cache = None
+    if cache is not None:
+        new_cache = MambaCache(conv=new_conv.astype(cache.conv.dtype), ssm=new_ssm)
+    return out, new_cache

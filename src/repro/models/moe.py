@@ -1,0 +1,185 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dense dispatch.
+
+Expert parallelism: the expert dimension is sharded over the "model" mesh axis
+(EP). Expert counts that don't divide the axis (qwen2-moe's 60 on a 16-way
+axis) are zero-padded to the next multiple with −inf router logits — padded
+experts are never selected and their (zero) weights contribute nothing, so
+numerics are exact.
+
+Dispatch is GShard/Switch-style with a static capacity
+``C = ceil(T·k/E · capacity_factor)``: one-hot dispatch/combine tensors and
+per-expert batched einsums. FLOPs therefore scale with *active* parameters
+(B·T·k·D·F), not total experts — the MODEL_FLOPS/HLO check in the roofline
+depends on this.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import dense
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, init_mlp
+
+
+def padded_experts(cfg: ModelConfig, model_axis: int = 16) -> int:
+    """Experts padded up to a multiple of the model axis (EP divisibility)."""
+    e = cfg.n_experts
+    return -(-e // model_axis) * model_axis if e % model_axis else e
+
+
+def init_moe(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    dt = cfg.pdtype()
+    d, f = cfg.d_model, cfg.moe_d_ff
+    e_pad = padded_experts(cfg)
+    s_in = 1.0 / (d ** 0.5)
+    s_out = 1.0 / (f ** 0.5)
+
+    def ew(k, shape, scale):
+        w = jax.random.normal(k, shape) * scale
+        # zero the padded experts so they are exact no-ops
+        mask = (jnp.arange(e_pad) < cfg.n_experts).astype(w.dtype)
+        return (w * mask[:, None, None]).astype(dt)
+
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e_pad)) * s_in).astype(jnp.float32),
+        "w_gate": ew(ks[1], (e_pad, d, f), s_in),
+        "w_up": ew(ks[2], (e_pad, d, f), s_in),
+        "w_down": ew(ks[3], (e_pad, f, d), s_out),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d, cfg.n_shared_experts * f)
+    return p
+
+
+def capacity(cfg: ModelConfig, group: int) -> int:
+    """Static per-group expert capacity. ``moe_dropless`` (serving/tests)
+    uses the worst case C = group size — exact; the capacity-factor path
+    (training) drops overflow tokens, GShard-style."""
+    if cfg.moe_dropless:
+        return group
+    c = math.ceil(group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(1, min(c, group))
+
+
+def _topk_dispatch(gates, k: int, cap: int):
+    """gates: [G, S, E] per-group routing probabilities.
+
+    Returns dispatch [G, S, E, C] (0/1) and combine [G, S, E, C] (weighted),
+    slot-major priority within each group (all slot-0 assignments first, in
+    token order). Capacity is per (group, expert)."""
+    g, s, e = gates.shape
+    topw, topi = jax.lax.top_k(gates, k)            # [G, S, k]
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # [G, S, k, E]
+    # slot-major flattening → positions within each expert's capacity buffer
+    flat = onehot.transpose(0, 2, 1, 3).reshape(g, k * s, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                # 0-based slot index
+    keep = (pos < cap) * flat
+    posc = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    posc = posc.reshape(g, k, s, e, cap)
+    dispatch = jnp.sum(posc, axis=1)                     # [G, S, E, C]
+    combine = jnp.einsum("gksec,gsk->gsec", posc, topw)
+    return dispatch, combine
+
+
+def _sorted_dispatch(gates, k: int, cap: int):
+    """§Perf lever L4: sort-based dispatch (MegaBlocks-style, per group).
+
+    Instead of the O(S·E·C) one-hot dispatch/combine tensors, sort the S·k
+    (token, expert) assignments by expert id within each group, derive each
+    assignment's slot in its expert's capacity buffer, and exchange data with
+    one gather + one scatter-add of O(E·C·D) bytes. Grouping keeps the sort
+    local to a data shard. Returns (token_for_slot [G, E·C] indices into the
+    group's tokens with S = "none", weight_for_slot [G, E·C])."""
+    g, s, e = gates.shape
+    topw, topi = jax.lax.top_k(gates, k)                 # [G, S, k]
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+    flat_e = topi.reshape(g, s * k)
+    flat_w = topw.reshape(g, s * k)
+    flat_t = jnp.broadcast_to(
+        jnp.arange(s)[:, None], (s, k)
+    ).reshape(s * k)                                     # token of each slot
+    order = jnp.argsort(flat_e, axis=1, stable=True)     # group-local sort
+    se = jnp.take_along_axis(flat_e, order, 1)
+    sw = jnp.take_along_axis(flat_w, order, 1)
+    st = flat_t[order]                                   # [G, S·k]
+    counts = jnp.sum(jax.nn.one_hot(flat_e, e, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, axis=1) - counts         # [G, E]
+    pos = jnp.arange(s * k)[None] - jnp.take_along_axis(starts, se, 1)
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)      # overflow → garbage
+    g_idx = jnp.arange(g)[:, None]
+    token_for_slot = jnp.full((g, e * cap + 1), s, jnp.int32)
+    token_for_slot = token_for_slot.at[g_idx, slot].set(st)[:, : e * cap]
+    weight_for_slot = jnp.zeros((g, e * cap + 1), topw.dtype)
+    weight_for_slot = weight_for_slot.at[g_idx, slot].set(sw)[:, : e * cap]
+    return token_for_slot, weight_for_slot
+
+
+def _moe_experts(p, xe, cfg: ModelConfig):
+    gate = dense(xe, p["w_gate"])
+    up = dense(xe, p["w_up"])
+    return dense(jax.nn.silu(gate) * up, p["w_down"])
+
+
+def moe_forward_sorted(p, xg, gates, cfg: ModelConfig, cap: int):
+    """Sorted-dispatch expert layer on grouped tokens xg [G, S, D]."""
+    g, s, d = xg.shape
+    e = gates.shape[-1]
+    token_for_slot, weight_for_slot = _sorted_dispatch(gates, cfg.top_k, cap)
+    xg_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        xg_pad, token_for_slot[..., None], axis=1
+    ).reshape(g, e, cap, d)
+    xe = constrain(xe, ("batch", "expert", None, "embed"))
+    ye = _moe_experts(p, xe, cfg)
+    ye = constrain(ye, ("batch", "expert", None, "embed"))
+    yflat = ye.reshape(g, e * cap, d) * weight_for_slot[..., None].astype(ye.dtype)
+    y = jnp.zeros((g, s + 1, d), ye.dtype)
+    y = y.at[jnp.arange(g)[:, None], token_for_slot].add(yflat)
+    return y[:, :s]
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """GShard-style grouped dispatch: tokens are split into groups of
+    ``moe_group_size`` (sharded over the data axes); dispatch/combine one-hot
+    einsums cost O(N·S·D) — linear in tokens — and per-expert compute scales
+    with *active* parameters. ``moe_impl="sorted"`` switches to the
+    sort-based dispatch (L4) with O(E·C·D) exchange tensors."""
+    b, t, d = x.shape
+    n = b * t
+    s = min(cfg.moe_group_size, n)
+    g = -(-n // s)
+    pad = g * s - n
+    xf = x.reshape(n, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xg = xf.reshape(g, s, d)
+    xg = constrain(xg, ("batch", None, "embed"))
+    cap = capacity(cfg, s)
+
+    logits = xg.astype(jnp.float32) @ p["router"]
+    # padded experts (EP divisibility) carry -inf router logits: never chosen
+    e_pad = p["router"].shape[1]
+    pad_mask = jnp.where(jnp.arange(e_pad) < cfg.n_experts, 0.0, -jnp.inf)
+    gates = jax.nn.softmax(logits + pad_mask, axis=-1)
+
+    if cfg.moe_impl == "sorted":
+        y = moe_forward_sorted(p, xg, gates, cfg, cap)
+    else:
+        dispatch, combine = _topk_dispatch(gates, cfg.top_k, cap)
+        xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+        xe = constrain(xe, ("batch", "expert", None, "embed"))
+        ye = _moe_experts(p, xe, cfg)
+        ye = constrain(ye, ("batch", "expert", None, "embed"))
+        y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+    y = y.reshape(g * s, d)[:n].reshape(b, t, d)
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, cfg)
+    return constrain(y, ("batch", "seq", "embed"))

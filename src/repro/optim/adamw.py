@@ -1,0 +1,99 @@
+"""AdamW with fp32 master weights, global-norm clipping, and a NaN guard.
+
+Params may live in bf16 (the model's param_dtype); the optimizer keeps fp32
+master copies and moments, computes the update in fp32, and casts back — the
+standard mixed-precision training recipe. ``update`` returns a ``skipped``
+flag instead of raising when gradients are non-finite (fault tolerance: a bad
+batch must not kill a 1000-node run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any   # fp32 master params
+    mu: Any
+    nu: Any
+
+
+def init(params) -> AdamWState:
+    # copy=True: with fp32 params astype would alias the param buffer and
+    # break donation (same buffer donated twice via params and master).
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(
+    grads, state: AdamWState, params, cfg: AdamWConfig, lr_scale: jax.Array
+) -> Tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    scale = jnp.where(
+        finite, jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)), 0.0
+    )
+    step = state.step + finite.astype(jnp.int32)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w
+        w_new = w - lr * delta
+        # NaN guard: on a skipped step every state entry is unchanged.
+        return (
+            jnp.where(finite, m_new, m),
+            jnp.where(finite, v_new, v),
+            jnp.where(finite, w_new, w),
+        )
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_w = treedef.flatten_up_to(state.master)
+    new = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    mu = treedef.unflatten([n[0] for n in new])
+    nu = treedef.unflatten([n[1] for n in new])
+    master = treedef.unflatten([n[2] for n in new])
+    flat_p = treedef.flatten_up_to(params)
+    new_params = treedef.unflatten(
+        [w.astype(p.dtype) for w, p in zip([n[2] for n in new], flat_p)]
+    )
+    metrics = {
+        "grad_norm": gnorm,
+        "skipped": (~finite).astype(jnp.float32),
+        "lr": lr,
+    }
+    return new_params, AdamWState(step=step, master=master, mu=mu, nu=nu), metrics

@@ -1,0 +1,75 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for bandwidth-bound data-parallel all-reduce).
+
+The DP all-reduce moves ``4·N`` bytes per step in fp32; int8 compression cuts
+the payload 4× at the cost of quantization noise, which error feedback (EF)
+re-injects next step so the *accumulated* update is unbiased in practice
+[Seide et al. 2014; Karimireddy et al. 2019]. Thematically this mirrors the
+paper: both replace exact wide arithmetic with narrow integer codes plus a
+correction structure (the paper's being exactness-by-construction, EF's being
+exactness-in-expectation).
+
+Used by the explicit shard_map DP path in train/trainer.py; under plain pjit
+the all-reduce is GSPMD-internal and cannot be intercepted — documented.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (codes int8, scale f32)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_ef(grads, error):
+    """(grads + error) → int8 codes + new error residual."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = compress_leaf(target)
+        recon = decompress_leaf(q, s)
+        return (q, s), target - recon
+
+    pairs = jax.tree.map(one, grads, error,
+                         is_leaf=lambda x: isinstance(x, jax.Array))
+    codes = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_error = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return codes, new_error
+
+
+def allreduce_compressed(grads, error, axis_name: str):
+    """Inside shard_map: compress+EF with a *shared* scale (pmax of local
+    amax), psum the int8 codes — the wire payload is the codes plus one
+    scalar per tensor. Shared scale keeps the psum of codes exact w.r.t. the
+    quantized values, so error feedback sees the true residual."""
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        amax = jax.lax.pmax(jnp.max(jnp.abs(target)), axis_name)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+        recon = q.astype(jnp.float32) * scale
+        new_e = target - recon
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones(()), axis_name)
+        return total.astype(jnp.float32) * scale / n, new_e
+
+    pairs = jax.tree.map(one, grads, error)
+    is_pair = lambda x: isinstance(x, tuple)
+    mean = jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair)
+    new_error = jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair)
+    return mean, new_error

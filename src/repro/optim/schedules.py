@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the step, elastic-restart friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, warmup: int, total: int, floor: float = 0.1):
+    """Returns a multiplier in [floor, 1]. step may be traced."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(s / max(1, warmup), 1.0)
+    prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return warm * (floor + (1.0 - floor) * cos)
+
+
+def constant(step, value: float = 1.0):
+    del step
+    return value

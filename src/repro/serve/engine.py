@@ -1,0 +1,174 @@
+"""Serving engine: batched prefill/decode with KV caches and DA-quantized
+weights (the paper's inference setting — weights constant, the DA precondition).
+
+``serve_step`` (single-token decode over the whole batch) is what the
+decode_32k / long_500k dry-run cells lower. The engine adds continuous
+batching on top: a slot-based scheduler admits requests into free batch rows,
+decodes all active rows each step, and retires rows on EOS/max-len.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_caches
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # [T0] int32
+    max_new_tokens: int = 32
+    eos_id: int = -1              # -1 → never stops early
+    generated: Optional[List[int]] = None
+
+    def __post_init__(self):
+        if self.generated is None:
+            self.generated = []
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, caches, tokens [B,T], positions) → (logits_last [B,V], caches)."""
+
+    def prefill(params, caches, tokens, positions):
+        logits, caches = forward(
+            params, tokens, cfg, positions=positions, caches=caches,
+            update_cache=True, last_logit_only=cfg.prefill_last_only,
+        )
+        return logits[:, -1], caches
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Single-token decode: (params, caches, token [B,1], pos [B,1]) →
+    (logits [B,V], caches). This is the dry-run's decode workload."""
+
+    def serve_step(params, caches, token, positions):
+        logits, caches = forward(
+            params, token, cfg, positions=positions, caches=caches
+        )
+        return logits[:, 0], caches
+
+    return serve_step
+
+
+def _mk_positions(cfg: ModelConfig, pos: jax.Array) -> jax.Array:
+    if cfg.mrope_sections:
+        return jnp.stack([pos, pos, pos], axis=-1)
+    return pos
+
+
+class ServeEngine:
+    """Slot-based continuous batching over a fixed decode batch."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        batch_size: int,
+        max_len: int,
+        greedy: bool = True,
+    ):
+        # the engine always uses the sliced prefill head (strictly better)
+        cfg = dataclasses.replace(cfg, prefill_last_only=True)
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_size
+        self.max_len = max_len
+        self.greedy = greedy
+        self.caches = init_caches(cfg, batch_size, max_len, cfg.dtype())
+        self._prefill_one = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_serve_step(cfg))
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.slot_len = np.zeros(batch_size, dtype=np.int64)
+        self.cur_token = np.zeros(batch_size, dtype=np.int32)
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.b):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_slot(i, req)
+
+    def _prefill_slot(self, i: int, req: Request) -> None:
+        """Per-slot prefill (batch=1 caches then scatter into slot i).
+
+        A production engine prefills in a separate batched pass; here each
+        admission runs a b=1 prefill and copies the KV into the slot — simple
+        and exact."""
+        cfg = self.cfg
+        t0 = len(req.prompt)
+        caches1 = init_caches(cfg, 1, self.max_len, cfg.dtype())
+        toks = jnp.asarray(req.prompt, dtype=jnp.int32)[None]
+        pos = _mk_positions(cfg, jnp.arange(t0, dtype=jnp.int32)[None])
+        logits, caches1 = self._prefill_one(self.params, caches1, toks, pos)
+        self.caches = _scatter_slot(self.caches, caches1, i)
+        tok = int(jnp.argmax(logits[0])) if self.greedy else int(
+            jax.random.categorical(jax.random.key(req.uid), logits[0])
+        )
+        req.generated.append(tok)
+        self.slots[i] = req
+        self.slot_len[i] = t0 + 1
+        self.cur_token[i] = tok
+
+    # -- decode --------------------------------------------------------------
+    def step(self) -> int:
+        """One batched decode step over all active slots; returns #active."""
+        self._admit()
+        active = [i for i in range(self.b) if self.slots[i] is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray(self.cur_token, dtype=jnp.int32)[:, None]
+        pos = _mk_positions(
+            self.cfg, jnp.asarray(self.slot_len - 1, dtype=jnp.int32)[:, None]
+        )
+        logits, self.caches = self._decode(self.params, self.caches, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            self.slot_len[i] += 1
+            self.cur_token[i] = tok
+            exhausted = len(req.generated) >= req.max_new_tokens
+            if tok == req.eos_id or exhausted or self.slot_len[i] >= self.max_len:
+                self.done[req.uid] = req
+                self.slots[i] = None
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return self.done
+
+
+def _scatter_slot(caches: Any, caches1: Any, slot: int) -> Any:
+    """Copy batch row 0 of caches1 into row ``slot`` of the engine caches.
+
+    Cache layouts: KVCache k/v [P, B, S, kv, hd]; MambaCache conv [P, B, C-1,
+    ch], ssm [P, B, H, Pd, S]; KVCache.length [P] is global (max over slots
+    drives nothing — per-slot lengths are tracked host-side and masked via
+    positions), so we take the elementwise max.
+    """
+
+    def one(big, small):
+        if big.ndim == 1:  # stacked scalar lengths [n_periods]
+            return jnp.maximum(big, small)
+        return jax.lax.dynamic_update_slice(
+            big, small.astype(big.dtype), (0, slot) + (0,) * (big.ndim - 2)
+        )
+
+    return jax.tree.map(one, caches, caches1)

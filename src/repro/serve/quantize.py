@@ -1,0 +1,75 @@
+"""Freeze a trained model into DA serving form (the paper's pre-VMM step,
+applied model-wide).
+
+Every weight-matrix leaf becomes a DAFrozenLinear: int8 codes + per-column
+scale (+ materialized weight-sum LUTs below ``lut_limit`` — the paper's PMA
+contents). Routers, norms, biases, embeddings and scalar SSM params stay
+float: they are not VMMs (gather / elementwise), noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.core.da import DAConfig
+from repro.core.linear import freeze_da
+
+# Param leaf names that are weight matrices (x @ W shaped [in, out] or
+# batched expert weights [E, in, out]).
+DA_LEAF_NAMES = {
+    "wq", "wk", "wv", "wo",          # attention projections
+    "w_up", "w_gate", "w_down",      # MLP / MoE experts / shared experts
+    "in_proj", "out_proj",           # mamba projections
+    "w",                             # lm head
+}
+SKIP_CONTEXT = {"router", "conv_w", "table"}
+
+
+def freeze_model_da(
+    params: Any,
+    da_cfg: DAConfig = DAConfig(x_signed=True),
+    mode: str = "auto",
+    lut_limit: int = 1 << 22,
+) -> Any:
+    """Walk the param tree; replace weight leaves with DA-frozen linears."""
+
+    def walk(path, leaf):
+        names = [_entry_name(p) for p in path]
+        last = names[-1] if names else ""
+        if last in DA_LEAF_NAMES and last not in SKIP_CONTEXT and leaf.ndim >= 2:
+            return freeze_da(leaf, da_cfg, mode=mode, lut_limit=lut_limit)
+        return leaf
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [walk(path, leaf) for path, leaf in flat]
+    )
+
+
+def _entry_name(entry) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def da_memory_report(frozen_params: Any) -> dict:
+    """The paper's Table-I trade-off at model scale: LUT cells vs weights."""
+    from repro.core.linear import DAFrozenLinear
+
+    weights = luts = mats = 0
+    for leaf in jax.tree.leaves(
+        frozen_params, is_leaf=lambda x: isinstance(x, DAFrozenLinear)
+    ):
+        if isinstance(leaf, DAFrozenLinear):
+            mats += 1
+            weights += leaf.wq.size
+            if leaf.luts is not None:
+                luts += leaf.luts.size
+    return {
+        "da_matrices": mats,
+        "weight_cells": weights,
+        "lut_cells": luts,
+        "cell_blowup": (luts / weights) if weights else 0.0,
+    }

@@ -1,0 +1,46 @@
+"""Bit-slicing baseline emulation (§IV): exact when the ADC has enough
+resolution; clips (accuracy loss) when it doesn't."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitslice import BitSliceConfig, adc_bits_required, bitslice_vmm
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 6),
+    k=st.integers(1, 30),
+    n=st.integers(1, 8),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitslice_exact_with_sufficient_adc(m, k, n, signed, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.integers(-128, 128, (m, k)) if signed
+         else rng.integers(0, 256, (m, k))).astype(np.int32)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int32)
+    cfg = BitSliceConfig(x_signed=signed, adc_bits=adc_bits_required(k))
+    got = np.asarray(bitslice_vmm(jnp.asarray(x), jnp.asarray(w), cfg))
+    np.testing.assert_array_equal(got, x @ w)
+
+
+def test_adc_bits_required():
+    assert adc_bits_required(25) == 5  # the paper's 5-bit ADC for 25 rows
+    assert adc_bits_required(1) == 1
+    assert adc_bits_required(255) == 8
+
+
+def test_insufficient_adc_clips():
+    """With all-ones inputs/weights the column count hits K — an ADC below
+    log2(K+1) bits must clip and the result must be wrong (this is the
+    resolution-pressure the paper's DA approach eliminates)."""
+    k = 25
+    x = np.full((1, k), 255, dtype=np.int32)
+    w = np.full((k, 1), 1, dtype=np.int32)
+    exact = bitslice_vmm(jnp.asarray(x), jnp.asarray(w),
+                         BitSliceConfig(adc_bits=5))
+    clipped = bitslice_vmm(jnp.asarray(x), jnp.asarray(w),
+                           BitSliceConfig(adc_bits=3))
+    assert np.asarray(exact)[0, 0] == 255 * k
+    assert np.asarray(clipped)[0, 0] < 255 * k

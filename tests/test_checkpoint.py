@@ -1,0 +1,74 @@
+"""Checkpointing: atomic roundtrip, checksum verification, async writer, GC,
+restore-into-template (elastic restart path)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as C
+
+
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), dtype=jnp.bfloat16),
+                   "step": jnp.asarray(7, dtype=jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    C.save(str(tmp_path), 3, tree)
+    assert C.all_steps(str(tmp_path)) == [3]
+    out = C.restore(str(tmp_path), 3, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_gc_keeps_last_k(tmp_path):
+    tree = _tree()
+    for s in range(6):
+        C.save(str(tmp_path), s, tree, keep=2)
+    assert C.all_steps(str(tmp_path)) == [4, 5]
+    assert C.latest_step(str(tmp_path)) == 5
+
+
+def test_checksum_detects_corruption(tmp_path):
+    tree = _tree()
+    path = C.save(str(tmp_path), 1, tree)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    man["arrays"]["a"]["crc32"] ^= 0xDEAD
+    json.dump(man, open(os.path.join(path, "manifest.json"), "w"))
+    with pytest.raises(IOError, match="checksum"):
+        C.restore(str(tmp_path), 1, tree)
+
+
+def test_async_checkpointer(tmp_path):
+    tree = _tree()
+    ac = C.AsyncCheckpointer(str(tmp_path), keep=3)
+    for s in (1, 2, 3):
+        ac.submit(s, tree)
+    ac.wait()
+    ac.close()
+    assert C.all_steps(str(tmp_path)) == [1, 2, 3]
+
+
+def test_restore_different_dtype_template(tmp_path):
+    """Elastic/precision-change restarts: restore casts into the template."""
+    tree = {"w": jnp.ones((4,), jnp.float32)}
+    C.save(str(tmp_path), 0, tree)
+    out = C.restore(str(tmp_path), 0, {"w": jnp.zeros((4,), jnp.bfloat16)})
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_partial_write_is_invisible(tmp_path):
+    """A crash mid-write (tmp dir left behind) must not surface as a valid
+    checkpoint."""
+    tree = _tree()
+    C.save(str(tmp_path), 1, tree)
+    os.makedirs(str(tmp_path / "step_00000002.tmp"))
+    assert C.latest_step(str(tmp_path)) == 1

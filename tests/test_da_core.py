@@ -1,0 +1,108 @@
+"""Property tests: Distributed-Arithmetic VMM is bit-exact (paper §II)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.da import (
+    DAConfig,
+    bit_coefs,
+    build_luts,
+    da_matmul,
+    da_vmm_bitplane,
+    da_vmm_lut,
+    da_vmm_onehot,
+    group_addresses,
+)
+from repro.core.quant import quantize_weights
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    k=st.integers(1, 40),
+    n=st.integers(1, 12),
+    signed=st.booleans(),
+    group=st.sampled_from([4, 8]),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_da_modes_exact(m, k, n, signed, group, bits, seed):
+    """All three DA execution modes equal the integer matmul exactly, for
+    every shape / signedness / group size / bit width."""
+    rng = np.random.default_rng(seed)
+    lo, hi = (-(1 << (bits - 1)), 1 << (bits - 1)) if signed else (0, 1 << bits)
+    x = rng.integers(lo, hi, (m, k)).astype(np.int32)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int32)
+    ref = x @ w
+    cfg = DAConfig(group_size=group, x_bits=bits, x_signed=signed)
+    luts = build_luts(jnp.asarray(w), group)
+    np.testing.assert_array_equal(np.asarray(da_vmm_lut(jnp.asarray(x), luts, cfg)), ref)
+    np.testing.assert_array_equal(np.asarray(da_vmm_onehot(jnp.asarray(x), luts, cfg)), ref)
+    np.testing.assert_array_equal(
+        np.asarray(da_vmm_bitplane(jnp.asarray(x), jnp.asarray(w), cfg)), ref
+    )
+
+
+def test_lut_structure():
+    """LUT[g, a] = sum of group rows whose address bit is set (paper Fig. 4:
+    at address 10101100 the value w8+w6+w4+w3 is stored)."""
+    w = jnp.arange(1, 9, dtype=jnp.int32)[:, None]  # K=8, N=1
+    luts = np.asarray(build_luts(w, 8))  # [1, 256, 1]
+    for addr in (0, 0b1, 0b10101100, 0xFF):
+        expect = sum((i + 1) for i in range(8) if addr >> i & 1)
+        assert luts[0, addr, 0] == expect
+    # 2^L entries, all possible sums
+    assert luts.shape == (1, 256, 1)
+
+
+def test_group_addresses_bit_order():
+    cfg = DAConfig(group_size=8, x_bits=8, x_signed=False)
+    x = jnp.asarray([[1, 0, 1, 0, 0, 1, 0, 1]], dtype=jnp.int32) * 255
+    addr = np.asarray(group_addresses(x, cfg))  # [1, 8, 1]
+    # every bit-plane of 255 is 1 → address has bits set where x row is 255
+    assert addr.shape == (1, 8, 1)
+    assert all(a == 0b10100101 for a in addr[0, :, 0])
+
+
+def test_sign_bit_coefficient():
+    coefs = bit_coefs(8, True)
+    assert coefs[-1] == -128 and coefs[0] == 1
+    assert bit_coefs(8, False)[-1] == 128
+
+
+def test_da_matmul_quant_roundtrip(rng):
+    """Float end-to-end: DA ≈ float matmul within int8 quant error, and
+    lut/bitplane modes agree bit-exactly."""
+    x = rng.normal(size=(6, 64)).astype(np.float32)
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    wq = quantize_weights(jnp.asarray(w))
+    luts = build_luts(wq.q)
+    cfg = DAConfig(x_signed=True)
+    y_lut = da_matmul(jnp.asarray(x), wq.q, wq.scale, cfg, mode="lut", luts=luts)
+    y_bp = da_matmul(jnp.asarray(x), wq.q, wq.scale, cfg, mode="bitplane")
+    ref = x @ w
+    np.testing.assert_array_equal(np.asarray(y_lut), np.asarray(y_bp))
+    rel = np.abs(np.asarray(y_lut) - ref).max() / np.abs(ref).max()
+    assert rel < 0.03
+
+
+def test_lut_memory_blowup():
+    """The paper's 56×-more-cells trade-off: LUT cells = 2^L/L × weights."""
+    w = jnp.ones((64, 16), dtype=jnp.int32)
+    luts = build_luts(w, 8)
+    assert luts.size / w.size == 256 / 8
+
+
+def test_stacked_mode_exact(rng):
+    """L7 stacked bit-plane DA (leading batch axis) == serial == int matmul."""
+    from repro.core.da import da_vmm_bitplane_stacked
+
+    for signed in (False, True):
+        lo, hi = (-128, 128) if signed else (0, 256)
+        x = rng.integers(lo, hi, (9, 77)).astype(np.int32)
+        w = rng.integers(-128, 128, (77, 11)).astype(np.int32)
+        cfg = DAConfig(x_signed=signed)
+        got = np.asarray(
+            da_vmm_bitplane_stacked(jnp.asarray(x), jnp.asarray(w), cfg))
+        np.testing.assert_array_equal(got, x @ w)

@@ -1,0 +1,157 @@
+"""Serving-path equivalences: prefill+decode == full forward (every arch);
+chunked (flash-style) attention == naive attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, reduce_for_smoke
+from repro.models.model import forward, init_caches, init_model
+
+KEY = jax.random.key(1)
+
+
+def _mk_pos(cfg, p1):
+    return jnp.stack([p1, p1, p1], -1) if cfg.mrope_sections else p1
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_decode_matches_forward(name):
+    cfg = dataclasses.replace(
+        reduce_for_smoke(ARCHS[name]), moe_dropless=True
+    )
+    params = init_model(KEY, cfg)
+    b, t, t0 = 2, 12, 8
+    if cfg.modality == "text":
+        inp = jax.random.randint(KEY, (b, t), 0, cfg.vocab)
+    else:
+        inp = jax.random.normal(KEY, (b, t, cfg.d_model), dtype=jnp.float32)
+    full, _ = forward(params, inp, cfg)
+    caches = init_caches(cfg, b, 20, jnp.float32)
+    lg, caches = forward(
+        params, inp[:, :t0], cfg,
+        positions=_mk_pos(cfg, jnp.broadcast_to(jnp.arange(t0)[None], (b, t0))),
+        caches=caches, update_cache=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full[:, :t0]), atol=2e-4, rtol=2e-3
+    )
+    for step in range(t0, t):
+        lg, caches = forward(
+            params, inp[:, step : step + 1], cfg,
+            positions=_mk_pos(cfg, jnp.full((b, 1), step, dtype=jnp.int32)),
+            caches=caches,
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full[:, step]),
+            atol=2e-4, rtol=2e-3,
+        )
+
+
+@pytest.mark.parametrize("name", ["qwen3-8b", "phi3-medium-14b", "jamba-1.5-large-398b"])
+@pytest.mark.parametrize("chunk", [4, 5, 16])
+def test_chunked_attention_equals_naive(name, chunk):
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS[name]), moe_dropless=True)
+    params = init_model(KEY, cfg)
+    b, t = 2, 16
+    inp = jax.random.randint(KEY, (b, t), 0, cfg.vocab)
+    naive, _ = forward(params, inp, cfg)
+    chunked, _ = forward(
+        params, inp, dataclasses.replace(cfg, attn_chunk_q=chunk)
+    )
+    np.testing.assert_allclose(
+        np.asarray(naive), np.asarray(chunked), atol=2e-4, rtol=2e-3
+    )
+
+
+def test_ragged_decode_positions():
+    """Per-row cache positions: rows at different lengths decode exactly as
+    their own full-forward would (continuous batching invariant)."""
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]))
+    params = init_model(KEY, cfg)
+    p1 = jax.random.randint(jax.random.key(2), (1, 5), 0, cfg.vocab)
+    p2 = jax.random.randint(jax.random.key(3), (1, 9), 0, cfg.vocab)
+    # batched caches: row 0 prefilled with p1 (len 5), row 1 with p2 (len 9)
+    caches = init_caches(cfg, 2, 24, jnp.float32)
+    lg1, c1 = forward(params, p1, cfg, caches=init_caches(cfg, 1, 24, jnp.float32), update_cache=True)
+    lg2, c2 = forward(params, p2, cfg, caches=init_caches(cfg, 1, 24, jnp.float32), update_cache=True)
+    from repro.serve.engine import _scatter_slot
+    caches = _scatter_slot(caches, c1, 0)
+    caches = _scatter_slot(caches, c2, 1)
+    tok = jnp.asarray([[int(jnp.argmax(lg1[0, -1]))], [int(jnp.argmax(lg2[0, -1]))]], dtype=jnp.int32)
+    pos = jnp.asarray([[5], [9]], dtype=jnp.int32)
+    lg, _ = forward(params, tok, cfg, positions=pos, caches=caches)
+    # reference: each row independently
+    ref1, _ = forward(params, jnp.concatenate([p1, tok[:1]], 1), cfg)
+    ref2, _ = forward(params, jnp.concatenate([p2, tok[1:]], 1), cfg)
+    np.testing.assert_allclose(np.asarray(lg[0, 0]), np.asarray(ref1[0, -1]), atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(lg[1, 0]), np.asarray(ref2[0, -1]), atol=2e-4, rtol=2e-3)
+
+
+@pytest.mark.parametrize("lever", [
+    dict(attn_mask_mode="additive"),
+    dict(attn_mask_mode="additive", softmax_dtype="bfloat16"),
+])
+def test_perf_levers_preserve_forward(lever):
+    """§Perf levers: additive mask is exact; bf16 softmax within quant noise."""
+    cfg = reduce_for_smoke(ARCHS["qwen3-8b"])
+    params = init_model(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    base, _ = forward(params, toks, cfg)
+    got, _ = forward(params, toks, dataclasses.replace(cfg, **lever))
+    tol = 0.0 if lever.get("softmax_dtype", "float32") == "float32" else 0.1
+    assert float(jnp.abs(got - base).max()) <= tol
+    # top-1 predictions unchanged
+    assert bool(jnp.all(jnp.argmax(got, -1) == jnp.argmax(base, -1)))
+
+
+def test_last_logit_only_matches():
+    cfg = reduce_for_smoke(ARCHS["phi3-medium-14b"])
+    params = init_model(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    base, _ = forward(params, toks, cfg)
+    last, _ = forward(params, toks, cfg, last_logit_only=True)
+    np.testing.assert_allclose(np.asarray(last[:, 0]), np.asarray(base[:, -1]),
+                               atol=1e-6)
+
+
+def test_lean_attention_matches_reference():
+    """L8 lean attention (hoisted bias, late divide) == reference softmax."""
+    for name in ("qwen3-8b", "mistral-nemo-12b", "jamba-1.5-large-398b"):
+        cfg = dataclasses.replace(reduce_for_smoke(ARCHS[name]),
+                                  moe_dropless=True)
+        params = init_model(KEY, cfg)
+        toks = jax.random.randint(KEY, (2, 14), 0, cfg.vocab)
+        base, _ = forward(params, toks, cfg)
+        lean, _ = forward(params, toks,
+                          dataclasses.replace(cfg, attn_impl="lean"))
+        np.testing.assert_allclose(np.asarray(lean), np.asarray(base),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_cache_slice_mode_matches_scatter():
+    """L9: uniform-position dynamic_update_slice cache == scatter cache."""
+    cfg0 = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]))
+    params = init_model(KEY, cfg0)
+    b, t = 2, 12
+    inp = jax.random.randint(KEY, (b, t), 0, cfg0.vocab)
+    outs = {}
+    for mode in ("scatter", "slice"):
+        cfg = dataclasses.replace(cfg0, cache_mode=mode)
+        caches = init_caches(cfg, b, 20, jnp.float32)
+        lg, caches = forward(
+            params, inp[:, :8], cfg,
+            positions=jnp.broadcast_to(jnp.arange(8)[None], (b, 8)),
+            caches=caches, update_cache=True)
+        seq = [np.asarray(lg)]
+        for step in range(8, t):
+            lg, caches = forward(
+                params, inp[:, step:step + 1], cfg,
+                positions=jnp.full((b, 1), step, dtype=jnp.int32),
+                caches=caches)
+            seq.append(np.asarray(lg))
+        outs[mode] = seq
+    for a, c in zip(outs["scatter"], outs["slice"]):
+        np.testing.assert_allclose(a, c, atol=1e-5)

@@ -1,0 +1,127 @@
+"""MoE: dropless dispatch == per-token loop reference; expert padding is an
+exact no-op; capacity drops tokens deterministically."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, reduce_for_smoke
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp
+from repro.models.moe import init_moe, moe_forward, padded_experts
+
+KEY = jax.random.key(7)
+
+
+def _cfg(**kw):
+    base = dict(
+        name="t", family="moe", n_layers=2, d_model=16, vocab=11,
+        n_heads=2, n_kv_heads=2, n_experts=6, top_k=2, moe_d_ff=8,
+        param_dtype="float32", compute_dtype="float32", moe_dropless=True,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _loop_reference(p, x, cfg):
+    """Per-token top-k expert mixture, computed with plain loops."""
+    b, t, d = x.shape
+    e_pad = p["router"].shape[1]
+    logits = np.array(x.reshape(-1, d) @ p["router"])
+    logits[:, cfg.n_experts:] = -np.inf
+    gates = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    out = np.zeros((b * t, d), np.float32)
+    xf = np.asarray(x.reshape(-1, d))
+    for i in range(b * t):
+        topi = np.argsort(-np.asarray(gates[i]))[: cfg.top_k]
+        topw = np.asarray(gates[i])[topi]
+        topw = topw / topw.sum()
+        for wgt, e in zip(topw, topi):
+            gate_e = xf[i] @ np.asarray(p["w_gate"][e])
+            up_e = xf[i] @ np.asarray(p["w_up"][e])
+            act = (gate_e / (1 + np.exp(-gate_e))) * up_e  # silu(gate)*up
+            out[i] += wgt * (act @ np.asarray(p["w_down"][e]))
+    return out.reshape(b, t, d)
+
+
+def test_dropless_matches_loop_reference():
+    cfg = _cfg()
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 5, cfg.d_model))
+    got = np.asarray(moe_forward(p, x, cfg))
+    want = _loop_reference(p, x, cfg)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+def test_expert_padding_exact():
+    """60 experts padded to 64: padded experts are never routed to and carry
+    zero weights — identical output to the unpadded count."""
+    cfg = _cfg(n_experts=6)
+    p = init_moe(KEY, cfg)
+    e_pad = padded_experts(cfg)
+    assert e_pad == 16  # 6 → 16 on the default 16-way axis
+    # padded expert weights are exactly zero
+    assert float(jnp.abs(p["w_up"][cfg.n_experts:]).max()) == 0.0
+    x = jax.random.normal(jax.random.key(2), (2, 4, cfg.d_model))
+    y = moe_forward(p, x, cfg)
+    # route probability mass only on real experts:
+    logits = x.reshape(-1, cfg.d_model) @ p["router"]
+    pad_mask = jnp.where(jnp.arange(e_pad) < cfg.n_experts, 0.0, -jnp.inf)
+    gates = jax.nn.softmax(logits + pad_mask, -1)
+    assert float(gates[:, cfg.n_experts:].max()) == 0.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_capacity_drops_when_overloaded():
+    """With capacity_factor far below 1, overflow tokens are dropped (their
+    expert contribution is zero) — GShard semantics."""
+    cfg = _cfg(moe_dropless=False, capacity_factor=0.1)
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.key(3), (2, 16, cfg.d_model))
+    y_small = np.asarray(moe_forward(p, x, cfg))
+    y_full = np.asarray(moe_forward(p, x, dataclasses.replace(cfg, moe_dropless=True)))
+    assert np.abs(y_small - y_full).max() > 1e-6  # something was dropped
+    assert np.isfinite(y_small).all()
+
+
+def test_shared_experts_add():
+    cfg = _cfg(n_shared_experts=2)
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.key(4), (1, 3, cfg.d_model))
+    y = np.asarray(moe_forward(p, x, cfg))
+    y_shared = np.asarray(apply_mlp(p["shared"], x, cfg))
+    no_shared = dict(p)
+    del no_shared["shared"]
+    y_routed = np.asarray(moe_forward(no_shared, x, cfg))
+    np.testing.assert_allclose(y, y_routed + y_shared, atol=1e-5, rtol=1e-5)
+
+
+def test_moe_grad_finite():
+    cfg = _cfg(moe_dropless=False)
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.key(5), (2, 8, cfg.d_model))
+    g = jax.grad(lambda pp: jnp.sum(moe_forward(pp, x, cfg) ** 2))(p)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))
+
+
+def test_sorted_dispatch_matches_dense():
+    """L4: sort-based dispatch == dense one-hot dispatch (dropless)."""
+    cfg = _cfg(moe_dropless=True)
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.key(9), (2, 9, cfg.d_model))
+    yd = moe_forward(p, x, cfg)
+    ys = moe_forward(p, x, dataclasses.replace(cfg, moe_impl="sorted"))
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yd), atol=1e-5)
+
+
+def test_sorted_dispatch_capacity_drops():
+    """Sorted dispatch drops overflow tokens exactly at capacity."""
+    cfg = _cfg(moe_dropless=False, capacity_factor=0.1, moe_impl="sorted")
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.key(10), (2, 16, cfg.d_model))
+    y = np.asarray(moe_forward(p, x, cfg))
+    assert np.isfinite(y).all()
+    y_full = np.asarray(moe_forward(
+        p, x, dataclasses.replace(cfg, moe_dropless=True)))
+    assert np.abs(y - y_full).max() > 1e-6

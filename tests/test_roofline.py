@@ -1,0 +1,60 @@
+"""Roofline machinery: HLO collective parser + three-term math."""
+import pytest
+
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    collective_bytes,
+    model_flops,
+)
+
+HLO = """
+HloModule test
+ENTRY %main {
+  %ag = bf16[256,4096]{1,0} all-gather(%p0), replica_groups={{0,1}}
+  ROOT %all-reduce = f32[128,1024]{1,0} all-reduce(%dot), channel_id=1
+  %rs = f32[64,64]{1,0} reduce-scatter(%x), dimensions={0}
+  %a2a = (s32[8,8]{1,0}, s32[8,8]{1,0}) all-to-all(%y, %z)
+  %cp = bf16[16]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ars = f32[2,2]{1,0} all-reduce-start(%q)
+  %ard = f32[2,2]{1,0} all-reduce-done(%ars)
+  %not_a_collective = f32[9]{0} add(%a, %b)
+}
+"""
+
+
+def test_collective_parser():
+    got = collective_bytes(HLO)
+    assert got["all-gather"] == 256 * 4096 * 2
+    assert got["all-reduce"] == 128 * 1024 * 4 + 2 * 2 * 4  # incl. -start once
+    assert got["reduce-scatter"] == 64 * 64 * 4
+    assert got["all-to-all"] == 2 * 8 * 8 * 4  # tuple shape summed
+    assert got["collective-permute"] == 16 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(
+        flops_per_chip=PEAK_FLOPS,          # exactly 1 s of compute
+        bytes_per_chip=HBM_BW / 2,          # 0.5 s of HBM
+        coll_bytes_per_chip=ICI_BW * 2,     # 2 s of ICI
+        chips=256,
+        model_flops_global=PEAK_FLOPS * 256 / 2,
+    )
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.t_collective == pytest.approx(2.0)
+    assert r.bottleneck == "collective"
+    assert r.useful_flops_fraction == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.25)  # 0.5s useful / 2s bound
+
+
+def test_model_flops_by_kind():
+    from repro.configs.registry import LM_SHAPES
+
+    train = next(s for s in LM_SHAPES if s.kind == "train")
+    dec = next(s for s in LM_SHAPES if s.name == "decode_32k")
+    n = 1e9
+    assert model_flops(None, train, n, n) == 6 * n * train.global_batch * train.seq_len
+    assert model_flops(None, dec, n, n) == 2 * n * dec.global_batch

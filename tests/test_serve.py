@@ -1,0 +1,108 @@
+"""Serving engine + DA quantized serving (the paper's end-to-end setting)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, reduce_for_smoke
+from repro.core.da import DAConfig
+from repro.core.linear import DAFrozenLinear
+from repro.models.model import forward, init_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.quantize import da_memory_report, freeze_model_da
+
+KEY = jax.random.key(0)
+
+
+def _cfg(name="qwen3-8b", **kw):
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS[name]), moe_dropless=True)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def test_continuous_batching_matches_offline():
+    cfg = _cfg()
+    params = init_model(KEY, cfg)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32)
+    rng = np.random.default_rng(1)
+    prompts = {uid: rng.integers(0, cfg.vocab, 4 + uid) for uid in range(4)}
+    for uid, pr in prompts.items():
+        eng.submit(Request(uid=uid, prompt=pr, max_new_tokens=5))
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2, 3]
+    for uid, pr in prompts.items():
+        toks = list(pr)
+        for _ in range(5):
+            lg, _ = forward(params, jnp.asarray(toks, dtype=jnp.int32)[None], cfg)
+            toks.append(int(jnp.argmax(lg[0, -1])))
+        assert done[uid].generated == toks[len(pr):], uid
+
+
+def test_freeze_model_da_replaces_weights():
+    cfg = _cfg()
+    params = init_model(KEY, cfg)
+    frozen = freeze_model_da(params, DAConfig(x_signed=True), mode="da_lut")
+    kinds = [type(l).__name__ for l in jax.tree.leaves(
+        frozen, is_leaf=lambda x: isinstance(x, DAFrozenLinear))]
+    assert "DAFrozenLinear" in kinds
+    rep = da_memory_report(frozen)
+    assert rep["da_matrices"] > 0
+    assert rep["cell_blowup"] == pytest.approx(32.0, rel=0.01)  # 2^8/8
+
+
+@pytest.mark.parametrize("mode", ["da_lut", "da_bitplane", "int8"])
+def test_da_serving_close_to_float(mode):
+    """DA-frozen model output ≈ float model (int8 quantization error only),
+    and the three integer modes are mutually bit-exact."""
+    cfg = _cfg()
+    params = init_model(KEY, cfg)
+    toks = jax.random.randint(jax.random.key(3), (2, 10), 0, cfg.vocab)
+    ref, _ = forward(params, toks, cfg)
+    frozen = freeze_model_da(params, DAConfig(x_signed=True), mode=mode)
+    got, _ = forward(frozen, toks, cfg)
+    # top-1 agreement on most positions (quantization-level differences)
+    agree = np.mean(
+        np.asarray(jnp.argmax(ref, -1) == jnp.argmax(got, -1)))
+    assert agree > 0.8, agree
+    rel = float(jnp.abs(got - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.2
+
+
+def test_da_modes_mutually_exact():
+    cfg = _cfg()
+    params = init_model(KEY, cfg)
+    toks = jax.random.randint(jax.random.key(4), (1, 6), 0, cfg.vocab)
+    outs = []
+    for mode in ("da_lut", "da_bitplane", "int8"):
+        frozen = freeze_model_da(params, DAConfig(x_signed=True), mode=mode)
+        outs.append(np.asarray(forward(frozen, toks, cfg)[0]))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-5)
+
+
+def test_da_serving_end_to_end_generation():
+    """The full paper pipeline: train-time float params → pre-VMM freeze →
+    multiplier-free generation through the engine."""
+    cfg = _cfg()
+    params = init_model(KEY, cfg)
+    frozen = freeze_model_da(params, DAConfig(x_signed=True), mode="da_bitplane")
+    eng = ServeEngine(cfg, frozen, batch_size=2, max_len=24)
+    rng = np.random.default_rng(5)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 4),
+                       max_new_tokens=4))
+    done = eng.run()
+    assert len(done[0].generated) == 4
+
+
+def test_moe_da_serving():
+    """Per-expert PMAs: MoE arch serves under DA quantization."""
+    cfg = _cfg("qwen2-moe-a2.7b")
+    params = init_model(KEY, cfg)
+    toks = jax.random.randint(jax.random.key(6), (2, 6), 0, cfg.vocab)
+    ref, _ = forward(params, toks, cfg)
+    frozen = freeze_model_da(params, DAConfig(x_signed=True), mode="da_bitplane")
+    got, _ = forward(frozen, toks, cfg)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    agree = np.mean(np.asarray(jnp.argmax(ref, -1) == jnp.argmax(got, -1)))
+    assert agree > 0.6, agree
