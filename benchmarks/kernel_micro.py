@@ -1,9 +1,9 @@
-"""Kernel microbenchmarks (CPU wall-time): DA LUT / bitplane / int8 / float
-matmul at LM-layer shapes, plus oracle-exactness spot checks.
+"""Kernel microbenchmarks (CPU wall-time): every registered DA engine backend
+plus the float/int8 baselines at LM-layer shapes, with exactness spot checks.
 
 On this CPU container the Pallas kernels run in interpret mode (a correctness
-tool, not a fast path), so the *jnp reference implementations* are timed —
-they are the lowering the TPU compiles. us_per_call is wall time per VMM.
+tool, not a fast path), so they are skipped here — the jnp backends timed are
+the lowering the TPU compiles. us_per_call is wall time per VMM.
 """
 from __future__ import annotations
 
@@ -13,14 +13,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.da import DAConfig, build_luts
-from repro.kernels import ref
+from repro.core.da import DAConfig
+from repro.core.engine import (
+    DEFAULT_LUT_LIMIT,
+    jit_backend,
+    lut_cells,
+    pack_quantized,
+    timeable_backends,
+)
 from repro.core.quant import quantize_acts_signed, quantize_weights
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -37,25 +42,25 @@ def run() -> list:
         w = jnp.asarray(rng.normal(size=(k, n)), dtype=jnp.float32)
         wq = quantize_weights(w)
         xq = quantize_acts_signed(x)
-        luts = build_luts(wq.q)
+        with_luts = lut_cells(k, n, cfg.group_size) <= DEFAULT_LUT_LIMIT
+        packed = pack_quantized(wq.q, wq.scale, cfg=cfg, with_luts=with_luts)
+        shape = f"{m}x{k}x{n}"
 
         f_float = jax.jit(lambda a, b: a @ b)
-        f_int8 = jax.jit(lambda a, b: jnp.matmul(a, b, preferred_element_type=jnp.int32))
-        f_bp = jax.jit(lambda a, b: ref.bitplane_vmm_ref(a, b, cfg))
-        f_lut = jax.jit(lambda a, l: ref.da_vmm_ref(a, l, cfg))
+        rows.append((f"float_matmul_{shape}", _time(f_float, x, w), "baseline"))
 
-        t_float = _time(f_float, x, w)
-        t_int8 = _time(f_int8, xq.q, wq.q)
-        t_bp = _time(f_bp, xq.q, wq.q)
-        t_lut = _time(f_lut, xq.q, luts)
-        exact = bool(
-            (np.asarray(f_bp(xq.q, wq.q)) == np.asarray(f_lut(xq.q, luts))).all()
-        )
-        shape = f"{m}x{k}x{n}"
-        rows.append((f"float_matmul_{shape}", t_float, "baseline"))
-        rows.append((f"int8_matmul_{shape}", t_int8, "quant baseline"))
-        rows.append((f"da_bitplane_{shape}", t_bp, f"exact={exact}"))
-        rows.append((f"da_lut_{shape}", t_lut, f"lut_cells={luts.size}"))
+        outs = {}
+        for spec in timeable_backends(cfg, packed.has_luts,
+                                      include_baselines=True):
+            fn = jit_backend(spec, cfg)
+            t = _time(fn, xq.q, packed)
+            outs[spec.name] = np.asarray(fn(xq.q, packed))
+            note = "quant baseline" if not spec.is_da else (
+                f"lut_cells={packed.luts.size}" if spec.needs_luts else "DA")
+            rows.append((f"{spec.name}_{shape}", t, note))
+        vals = list(outs.values())
+        exact = all((v == vals[0]).all() for v in vals[1:])
+        assert exact, f"backends diverged at {shape}"
     return rows
 
 

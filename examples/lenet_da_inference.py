@@ -9,7 +9,8 @@ Run: PYTHONPATH=src python examples/lenet_da_inference.py
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.da import DAConfig, build_luts, da_vmm_lut
+from repro.core.da import DAConfig
+from repro.core.engine import da_vmm, pack_quantized
 from repro.core.hwmodel import BitSliceDesign, DADesign
 from repro.core.quant import quantize_weights
 
@@ -40,10 +41,11 @@ def main():
 
     print("pre-VMM: summing weights and writing three PMAs "
           "(two 256x66, one 512x66) ...")
-    luts = build_luts(wq.q)
+    cfg = DAConfig(x_signed=False)
+    packed = pack_quantized(wq.q, wq.scale, cfg=cfg)     # LUTs built once
 
     cols = im2col(img)                                   # 784 strides
-    acc = da_vmm_lut(jnp.asarray(cols), luts, DAConfig(x_signed=False))
+    acc = da_vmm(jnp.asarray(cols), packed, mode="lut")  # faithful PMA readout
     feature_maps = np.asarray(acc).reshape(28, 28, 6).transpose(2, 0, 1)
 
     ref = (cols @ np.asarray(wq.q)).reshape(28, 28, 6).transpose(2, 0, 1)

@@ -12,9 +12,10 @@ Run: PYTHONPATH=src python examples/lenet_full_da.py
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.da import DAConfig, build_luts, da_vmm_lut
+from repro.core.da import DAConfig
+from repro.core.engine import da_vmm, pack_quantized
 from repro.core.hwmodel import BitSliceDesign, DADesign
-from repro.core.quant import quantize_acts_signed, quantize_weights
+from repro.core.quant import quantize_weights
 
 
 def im2col(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
@@ -46,16 +47,16 @@ def da_layer(x_int: np.ndarray, w_float: np.ndarray, name: str,
     x_int: [M, K] integer activations; w_float: [K, N] trained weights.
     """
     wq = quantize_weights(jnp.asarray(w_float))
-    luts = build_luts(wq.q)
+    bits_in = 8
+    cfg = DAConfig(group_size=8, x_bits=bits_in, x_signed=not unsigned)
+    packed = pack_quantized(wq.q, wq.scale, cfg=cfg)  # pre-VMM, LUTs once
     # re-quantize activations to 8 bits (the inter-layer requantization any
     # integer pipeline performs; inputs are unsigned after ReLU / images)
     amax = max(1, int(np.abs(x_int).max()))
-    bits_in = 8
     qmax = (1 << bits_in) - 1 if unsigned else (1 << (bits_in - 1)) - 1
     xq = np.clip((x_int.astype(np.float64) * qmax / amax).round(),
                  0 if unsigned else -qmax - 1, qmax).astype(np.int32)
-    cfg = DAConfig(group_size=8, x_bits=bits_in, x_signed=not unsigned)
-    acc = np.asarray(da_vmm_lut(jnp.asarray(xq), luts, cfg))
+    acc = np.asarray(da_vmm(jnp.asarray(xq), packed, mode="lut"))
     # exactness vs direct integer matmul
     assert (acc == xq @ np.asarray(wq.q)).all(), name
 

@@ -2,9 +2,10 @@
 
 1. Build a weight matrix, quantize it (post-training symmetric INT8, §II-C).
 2. Pre-VMM: compute all 2^8 weight sums per 8-row group and 'write the PMAs'
-   (build_luts — the once-in-a-lifetime step, §III-A).
-3. Run a bit-serial, multiplier-free, ADC-free VMM (§II) — bit-exact against
-   the integer matmul.
+   (pack_quantized / pack_weights — the once-in-a-lifetime step, §III-A).
+3. Run a bit-serial, multiplier-free, ADC-free VMM through the unified engine
+   (§II) — every registered backend is bit-exact against the integer matmul,
+   and mode="auto" picks the backend from the activation/layer shape.
 4. Ask the calibrated hardware model what this costs on a ReRAM engine vs the
    bit-slicing baseline (Table I).
 
@@ -16,11 +17,12 @@ import numpy as np
 
 from repro.core import (
     DAConfig,
-    build_luts,
     da_matmul,
-    da_vmm_lut,
-    quantize_acts_unsigned,
-    quantize_weights,
+    da_vmm,
+    pack_quantized,
+    pack_weights,
+    registered_backends,
+    select_backend,
 )
 from repro.core.hwmodel import table1
 
@@ -33,24 +35,36 @@ def main():
     w = rng.integers(-128, 128, (25, 6)).astype(np.int32)   # INT8 weights
 
     cfg = DAConfig(group_size=8, x_bits=8, x_signed=False)
-    luts = build_luts(jnp.asarray(w))                        # pre-VMM (once!)
-    print(f"PMAs: {luts.shape[0]} arrays of 2^8={luts.shape[1]} weight-sums "
-          f"x {luts.shape[2]} columns")
+    packed = pack_quantized(w, cfg=cfg)                      # pre-VMM (once!)
+    print(f"PMAs: {packed.luts.shape[0]} arrays of 2^8={packed.luts.shape[1]} "
+          f"weight-sums x {packed.luts.shape[2]} columns")
 
-    y = da_vmm_lut(jnp.asarray(x), luts, cfg)                # 8 bit-serial cycles
+    y = da_vmm(jnp.asarray(x), packed, mode="lut")           # 8 bit-serial cycles
     print("DA result:      ", np.asarray(y)[0])
     print("integer matmul: ", (x @ w)[0])
     assert (np.asarray(y) == x @ w).all(), "DA must be bit-exact"
-    print("bit-exact ✓ — no multiplier, no DAC, no ADC\n")
+    print("bit-exact ✓ — no multiplier, no DAC, no ADC")
+
+    # every eligible engine backend computes the same integers (int8 is
+    # signed-only, so it sits this unsigned-activation demo out)
+    verified = []
+    for name, spec in sorted(registered_backends().items()):
+        if spec.supports(cfg, packed.has_luts):
+            assert (np.asarray(da_vmm(jnp.asarray(x), packed, mode=name))
+                    == x @ w).all(), name
+            verified.append(name)
+    print(f"…and so does every eligible engine backend: "
+          f"{', '.join(verified)}\n")
 
     # --- float end-to-end (LM-style linear layer) ---------------------------
     xf = rng.normal(size=(4, 64)).astype(np.float32)
     wf = rng.normal(size=(64, 32)).astype(np.float32)
-    wq = quantize_weights(jnp.asarray(wf))
-    y_da = da_matmul(jnp.asarray(xf), wq.q, wq.scale, DAConfig(x_signed=True),
-                     mode="bitplane")
+    pw = pack_weights(jnp.asarray(wf))                       # codes + scale + LUTs
+    y_da = da_matmul(jnp.asarray(xf), pw, mode="auto")       # shape-aware dispatch
+    chosen = select_backend(4, 64, 32, DAConfig(x_signed=True), pw.has_luts)
     rel = np.abs(np.asarray(y_da) - xf @ wf).max() / np.abs(xf @ wf).max()
-    print(f"float linear via DA: rel err {rel:.4f} (int8 quantization only)\n")
+    print(f"float linear via DA engine (auto -> {chosen}): "
+          f"rel err {rel:.4f} (int8 quantization only)\n")
 
     # --- what does it cost in silicon? (paper Table I) ----------------------
     t = table1(k=25, n=6)

@@ -3,7 +3,11 @@ the paper's setting end-to-end: weights are frozen after training, the
 pre-VMM step builds the integer DA artifacts, and every linear layer of the
 serving graph runs the multiplier-free datapath.
 
-Run: PYTHONPATH=src python examples/serve_da.py [--requests 8] [--mode da_lut]
+Run: PYTHONPATH=src python examples/serve_da.py [--requests 8] [--mode auto]
+
+``--mode auto`` exercises the engine's shape-aware dispatch: layers whose
+LUTs fit memory read the PMAs on decode-like shapes, everything else runs the
+stacked bit-plane matmul — all behind one verified surface.
 """
 import argparse
 import dataclasses
@@ -13,10 +17,9 @@ import jax
 import numpy as np
 
 from repro.configs.registry import ARCHS
-from repro.core.da import DAConfig
 from repro.models.model import count_params, init_model
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.quantize import da_memory_report, freeze_model_da
+from repro.serve.quantize import da_memory_report
 
 
 def build_cfg():
@@ -41,26 +44,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--mode", default="da_lut",
-                    choices=["da_lut", "da_bitplane", "int8", "float"])
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "lut", "onehot", "bitplane",
+                             "bitplane_stacked", "int8", "float",
+                             "da_lut", "da_bitplane"])  # legacy aliases
     args = ap.parse_args()
 
     cfg = build_cfg()
     params = init_model(jax.random.key(0), cfg)
     print(f"model: {count_params(cfg)/1e6:.1f}M params")
 
+    t0 = time.perf_counter()
+    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=96,
+                      da_mode=args.mode)  # freezes through the unified engine
     if args.mode != "float":
-        t0 = time.perf_counter()
-        params = freeze_model_da(
-            params, DAConfig(x_signed=True), mode=args.mode
-        )
-        rep = da_memory_report(params)
+        rep = da_memory_report(eng.params)
         print(f"pre-VMM freeze ({args.mode}) in {time.perf_counter()-t0:.1f}s: "
               f"{rep['da_matrices']} weight matrices -> DA form, "
               f"LUT blow-up {rep['cell_blowup']:.0f}x" if rep["lut_cells"]
               else f"pre-VMM freeze ({args.mode}): {rep['da_matrices']} matrices")
-
-    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=96)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for uid in range(args.requests):

@@ -1,13 +1,23 @@
 # The paper's primary contribution: Distributed-Arithmetic VMM as a
-# composable JAX library (quantization, LUT construction, DA execution
-# modes, bit-slicing baseline, calibrated hardware cost model).
+# composable JAX library (quantization, LUT construction, the unified
+# execution engine, bit-slicing baseline, calibrated hardware cost model).
 from repro.core.da import (  # noqa: F401
     DAConfig,
     build_luts,
-    da_matmul,
     da_vmm_bitplane,
     da_vmm_lut,
     da_vmm_onehot,
+)
+from repro.core.engine import (  # noqa: F401
+    BackendSpec,
+    PackedWeights,
+    da_matmul,
+    da_vmm,
+    dense,
+    pack_quantized,
+    pack_weights,
+    registered_backends,
+    select_backend,
 )
 from repro.core.linear import DAFrozenLinear, freeze_da  # noqa: F401
 from repro.core.quant import (  # noqa: F401

@@ -27,7 +27,6 @@ All return the exact int32 accumulator (== X @ W in integer arithmetic).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -215,7 +214,6 @@ def da_vmm_bitplane_stacked(
     return jnp.einsum("bmn,b->mn", mr, coefs).astype(out_dtype)
 
 
-@partial(jax.jit, static_argnames=("cfg", "mode"))
 def da_matmul(
     x: jax.Array,
     wq: jax.Array,
@@ -227,23 +225,16 @@ def da_matmul(
     """End-to-end DA linear: float in → quantize → DA integer VMM → dequantize.
 
     x: [.., K] float; wq int [K, N] with per-column w_scale [1, N] (or scalar).
-    """
-    from repro.core.quant import quantize_acts_signed
 
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    x2 = x.reshape(-1, k)
-    xqt = quantize_acts_signed(x2, bits=cfg.x_bits)
-    scfg = dataclasses.replace(cfg, x_signed=True)
-    if mode == "lut":
-        assert luts is not None, "lut mode requires precomputed LUTs"
-        acc = da_vmm_lut(xqt.q, luts, scfg)
-    elif mode == "onehot":
-        assert luts is not None, "onehot mode requires precomputed LUTs"
-        acc = da_vmm_onehot(xqt.q, luts, scfg)
-    elif mode == "bitplane":
-        acc = da_vmm_bitplane(xqt.q, wq, scfg)
-    else:
-        raise ValueError(f"unknown DA mode: {mode}")
-    y = acc.astype(jnp.float32) * xqt.scale * w_scale
-    return y.reshape(lead + (wq.shape[-1],))
+    Legacy entry point, kept for callers holding raw (wq, w_scale, luts)
+    triples; it wraps them in a PackedWeights artifact and dispatches through
+    the unified engine (repro.core.engine), which owns the backend registry
+    and the shape-aware ``"auto"`` policy.
+    """
+    from repro.core import engine  # deferred: engine imports this module
+
+    packed = engine.PackedWeights(
+        wq=wq, w_scale=jnp.asarray(w_scale, dtype=jnp.float32), luts=luts,
+        cfg=cfg, mode=mode,
+    )
+    return engine.da_matmul(x, packed, cfg=cfg, mode=mode)

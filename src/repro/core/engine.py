@@ -1,0 +1,637 @@
+"""Unified Distributed-Arithmetic execution engine (backend registry + dispatch).
+
+The paper proves one identity — ``Y = X @ W`` computed multiplier-free via
+precomputed weight-sum LUTs and bit-serial shift-and-add (§II–III) — and this
+repo carries several equivalent executions of it: the faithful LUT gather, the
+one-hot MXU readout, the storage-free bit-plane forms, and the Pallas TPU
+kernels.  This module puts all of them behind ONE entry point::
+
+    y = da_matmul(x, packed, mode="auto")          # float in → float out
+    acc = da_vmm(xq, packed, mode="bitplane")      # integer codes → int32
+
+with three pieces of machinery:
+
+**1. The backend registry.**  Every execution mode is a :class:`BackendSpec`
+registered under a canonical name with a *capability spec*: does it need
+materialized LUTs?  What group sizes can it address?  Does it run on the int8
+MXU path?  Does it handle K that is not a multiple of the group size (the
+padding rule)?  ``registered_backends()`` is the single source of truth the
+differential test suite sweeps, so a new backend is verified the moment it is
+registered.
+
+===================  =========  ======================================
+name                 needs LUTs  execution
+===================  =========  ======================================
+``lut``              yes        faithful PMA readout: gather + shift-add
+``onehot``           yes        one-hot(addr) @ LUT on the MXU
+``pallas_lut``       yes        Pallas kernel (in-VMEM LUT readout)
+``bitplane``         no         Σ_b 2^b · (xbit_b @ W), serial cycles
+``bitplane_stacked`` no         bit-planes stacked on M: ONE int8 matmul
+``pallas_bitplane``  no         Pallas kernel (bit-plane streaming)
+``int8``             no         int8×int8 reference matmul (baseline,
+                                not multiplier-free — never auto-picked)
+===================  =========  ======================================
+
+**2. The ``"auto"`` policy.**  ``mode="auto"`` picks the backend from the
+``(M, K, N, x_bits)`` shape: shapes are folded into coarse buckets
+(:func:`shape_bucket`), and a measured cost table — produced by
+``benchmarks/engine_autotune.py``, which times every backend per bucket and
+writes a JSON cache — maps each bucket to per-backend µs.  The cheapest
+*eligible* backend wins (LUT modes are only eligible when the packed weights
+carry LUTs; the ``int8`` baseline is never auto-picked because it is not
+multiplier-free).  Without a cache the engine falls back to a deterministic
+heuristic: decode-like shapes (M ≤ 8) with LUTs available read the PMAs
+(``lut``); everything else runs the one-matmul ``bitplane_stacked`` form.
+Regenerate the cache with::
+
+    PYTHONPATH=src python benchmarks/engine_autotune.py        # full
+    PYTHONPATH=src python benchmarks/engine_autotune.py --quick
+
+The cache lives at ``artifacts/engine_autotune.json`` (override with the
+``REPRO_ENGINE_AUTOTUNE`` env var) and is loaded lazily on first dispatch.
+
+**3. ``PackedWeights``.**  The single frozen-weight artifact: int8 codes +
+per-column scale + optional LUTs, built ONCE by :func:`pack_weights` (the
+paper's pre-VMM step, §III-A) and shared by every backend.  It is a pytree
+(leaf names ``wq`` / ``w_scale`` / ``luts`` — stable for sharding rules), it
+is callable (``packed(x)`` runs the engine), and MoE-style stacked experts
+``[E, K, N]`` vmap through it unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.da import (
+    DAConfig,
+    build_luts,
+    da_vmm_bitplane,
+    da_vmm_bitplane_stacked,
+    da_vmm_lut,
+    da_vmm_onehot,
+    num_groups,
+)
+from repro.core.quant import QTensor, quantize_acts_signed, quantize_weights
+
+# ---------------------------------------------------------------------------
+# PackedWeights — the one frozen-weight artifact every backend reads
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedWeights:
+    """Frozen DA linear weights: the PMA contents for one weight matrix.
+
+    wq:      [K, N] (or stacked experts [E, K, N]) integer codes, int8 storage.
+    w_scale: [1, N] (or [E, 1, N]) per-output-column float32 scale.
+    luts:    [G, 2^L, N] weight-sum tables from build_luts, or None.
+    cfg:     DAConfig the artifact was packed under (group_size, x_bits).
+    mode:    default execution mode for ``packed(x)`` ("auto" → dispatch).
+    """
+
+    wq: jax.Array
+    w_scale: jax.Array
+    luts: Optional[jax.Array]
+    cfg: DAConfig
+    mode: str = "auto"
+
+    @property
+    def k(self) -> int:
+        return self.wq.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.wq.shape[-1]
+
+    @property
+    def has_luts(self) -> bool:
+        return self.luts is not None
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return da_matmul(x, self)  # mode=None → this artifact's default
+
+
+jax.tree_util.register_pytree_with_keys(
+    PackedWeights,
+    lambda t: (
+        (("wq", t.wq), ("w_scale", t.w_scale), ("luts", t.luts)),
+        (t.cfg, t.mode),
+    ),
+    lambda aux, ch: PackedWeights(
+        wq=ch[0], w_scale=ch[1], luts=ch[2], cfg=aux[0], mode=aux[1]
+    ),
+)
+
+
+def lut_cells(k: int, n: int, group_size: int) -> int:
+    """Memory cells a materialized LUT costs (the 2^L/L× blow-up, Table I)."""
+    return num_groups(k, group_size) * (1 << group_size) * n
+
+
+#: Default LUT budget in cells per matrix, shared by the serving freeze
+#: (pack_weights / freeze_da / freeze_model_da) AND the autotune benchmark —
+#: one constant so "which layers carry LUTs" and "which buckets time LUT
+#: backends" can't drift apart.
+DEFAULT_LUT_LIMIT = 1 << 24
+
+
+def pack_weights(
+    w: jax.Array,
+    cfg: DAConfig = DAConfig(x_signed=True),
+    mode: str = "auto",
+    lut_cell_limit: int = DEFAULT_LUT_LIMIT,
+) -> PackedWeights:
+    """Pre-VMM procedure (§III-A): quantize once, sum weights, 'write the PMAs'.
+
+    Accepts 2-D float weights [K, N] or batched experts [E, K, N].  LUTs are
+    built exactly once, here, and shared by every LUT-reading backend:
+    when ``mode`` names a LUT backend, or under ``mode="auto"`` whenever the
+    blow-up stays within ``lut_cell_limit``.
+
+    NOTE ``lut_cell_limit`` is measured in LUT **cells** per matrix (the paper's
+    2^L/L× blow-up: ``lut_cells(k, n, group_size)``), not in weights — the
+    seed's ``freeze_da`` bounded weight count instead; at group_size 8 one
+    weight costs 32 cells, so the default 2^24 cells ≈ 64 MB of int32 LUTs
+    admits layers up to ~512K weights.
+    """
+    mode = canonical_mode(mode)
+    wq: QTensor = quantize_weights(w, bits=8, axis=w.ndim - 2)
+    k, n = w.shape[-2], w.shape[-1]
+    if mode == "auto":
+        with_luts = lut_cells(k, n, cfg.group_size) <= lut_cell_limit
+    else:
+        with_luts = get_backend(mode).needs_luts
+    luts = None
+    if with_luts:
+        build = partial(build_luts, group_size=cfg.group_size)
+        for _ in range(w.ndim - 2):
+            build = jax.vmap(build, in_axes=(0,), out_axes=0)
+        luts = build(wq.q)
+    # int8 storage: the codes are the deployable artifact (4× smaller reads)
+    return PackedWeights(
+        wq=wq.q.astype(jnp.int8), w_scale=wq.scale, luts=luts, cfg=cfg,
+        mode=mode,
+    )
+
+
+def pack_quantized(
+    wq: jax.Array,
+    w_scale=1.0,
+    cfg: DAConfig = DAConfig(),
+    mode: str = "auto",
+    with_luts: bool = True,
+) -> PackedWeights:
+    """Wrap already-integer weight codes [K, N] as a PackedWeights artifact."""
+    mode = canonical_mode(mode)
+    wq = jnp.asarray(wq)
+    luts = build_luts(wq.astype(jnp.int32), cfg.group_size) if with_luts else None
+    return PackedWeights(
+        wq=wq, w_scale=jnp.asarray(w_scale, dtype=jnp.float32), luts=luts,
+        cfg=cfg, mode=mode,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Capability spec + implementation of one DA execution mode.
+
+    fn:             (xq int32 [M,K], packed, cfg) → int32 [M,N] == xq @ wq.
+    needs_luts:     reads materialized weight-sum LUTs from the artifact.
+    is_da:          multiplier-free DA datapath (auto-dispatch only considers
+                    these; baselines like int8 must be requested explicitly).
+    int8_path:      contracts on the int8 MXU path (operands must fit int8).
+    signed_only:    requires two's-complement activation codes.
+    max_group_size: LUT addressability bound (2^L rows per PMA).
+    pads_k:         handles K not a multiple of group_size by zero-padding.
+    """
+
+    name: str
+    fn: Callable[[jax.Array, PackedWeights, DAConfig], jax.Array]
+    description: str = ""
+    needs_luts: bool = False
+    is_da: bool = True
+    #: Advisory, not an eligibility gate: the backend contracts on the int8
+    #: MXU path (weight codes must fit int8 — guaranteed by the 8-bit
+    #: quantizer). Drives TPU tiling choices and is recorded for autotuning.
+    int8_path: bool = False
+    signed_only: bool = False
+    max_group_size: int = 16
+    pads_k: bool = True
+
+    def supports(self, cfg: DAConfig, has_luts: bool,
+                 k: Optional[int] = None) -> bool:
+        """Is this backend eligible for an artifact packed under ``cfg``?
+
+        ``k`` (the contraction dim) is checked against the padding rule when
+        known: a backend with ``pads_k=False`` only takes K that is a
+        multiple of the group size."""
+        if self.needs_luts and not has_luts:
+            return False
+        if self.signed_only and not cfg.x_signed:
+            return False
+        if cfg.group_size > self.max_group_size:
+            return False
+        if (k is not None and not self.pads_k
+                and k % cfg.group_size != 0):
+            return False
+        return True
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+#: Legacy / call-site mode spellings → canonical registry names.
+MODE_ALIASES = {
+    "da_lut": "lut",
+    "da_onehot": "onehot",
+    "da_bitplane": "bitplane",
+    "da_bitplane_stacked": "bitplane_stacked",
+    "stacked": "bitplane_stacked",
+    "pallas": "pallas_lut",
+}
+
+
+def canonical_mode(mode: str) -> str:
+    return MODE_ALIASES.get(mode, mode)
+
+
+def register_backend(name: str, **caps):
+    """Decorator: register ``fn(xq, packed, cfg) → int32`` under ``name``."""
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = BackendSpec(name=name, fn=fn, **caps)
+        return fn
+
+    return deco
+
+
+def registered_backends() -> Dict[str, BackendSpec]:
+    """Name → spec of every registered backend (the differential-test sweep)."""
+    return dict(_REGISTRY)
+
+
+def get_backend(mode: str) -> BackendSpec:
+    name = canonical_mode(mode)
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown DA mode {mode!r}; registered backends: "
+            f"{', '.join(sorted(_REGISTRY))} (plus 'auto' for shape-based "
+            f"dispatch)"
+        )
+    return _REGISTRY[name]
+
+
+@register_backend(
+    "lut", needs_luts=True,
+    description="faithful PMA readout: LUT gather + bit-serial shift-and-add",
+)
+def _lut_backend(xq, packed, cfg):
+    return da_vmm_lut(xq, packed.luts, cfg)
+
+
+@register_backend(
+    "onehot", needs_luts=True,
+    description="address decoder as one-hot; LUT readout on the MXU",
+)
+def _onehot_backend(xq, packed, cfg):
+    return da_vmm_onehot(xq, packed.luts, cfg)
+
+
+@register_backend(
+    "pallas_lut", needs_luts=True,
+    description="Pallas TPU kernel: in-VMEM LUT readout (interpret on CPU)",
+)
+def _pallas_lut_backend(xq, packed, cfg):
+    from repro.kernels.ops import da_vmm as _kernel_da_vmm
+
+    return _kernel_da_vmm(xq, packed.luts, cfg, backend="pallas")
+
+
+@register_backend(
+    "bitplane",
+    description="storage-free serial DA: Σ_b 2^b · (xbit_b @ W)",
+)
+def _bitplane_backend(xq, packed, cfg):
+    return da_vmm_bitplane(xq, packed.wq.astype(jnp.int32), cfg)
+
+
+@register_backend(
+    "bitplane_stacked", int8_path=True,
+    description="bit-planes stacked on M: one int8 matmul, W read once",
+)
+def _stacked_backend(xq, packed, cfg):
+    return da_vmm_bitplane_stacked(xq, packed.wq, cfg)
+
+
+@register_backend(
+    "pallas_bitplane",
+    description="Pallas TPU kernel: bit-plane streaming (interpret on CPU)",
+)
+def _pallas_bitplane_backend(xq, packed, cfg):
+    from repro.kernels.ops import bitplane_vmm as _kernel_bitplane_vmm
+
+    return _kernel_bitplane_vmm(xq, packed.wq.astype(jnp.int32), cfg,
+                                backend="pallas")
+
+
+@register_backend(
+    "int8", is_da=False, int8_path=True, signed_only=True,
+    description="int8×int8 reference matmul (quantization baseline, not DA)",
+)
+def _int8_backend(xq, packed, cfg):
+    return jnp.matmul(
+        xq.astype(jnp.int8), packed.wq.astype(jnp.int8),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def timeable_backends(cfg: DAConfig, has_luts: bool,
+                      include_baselines: bool = False):
+    """Backends worth timing on this host (shared by engine_autotune and
+    kernel_micro so their eligibility rules cannot drift): capability-
+    eligible, DA-only unless baselines are requested, and skipping the
+    Pallas kernels off-TPU, where interpret mode is a correctness tool
+    rather than a timing."""
+    on_tpu = jax.default_backend() == "tpu"
+    for name, spec in sorted(_REGISTRY.items()):
+        if not spec.supports(cfg, has_luts):
+            continue
+        if not (spec.is_da or include_baselines):
+            continue
+        if name.startswith("pallas") and not on_tpu:
+            continue
+        yield spec
+
+
+def jit_backend(spec: BackendSpec, cfg: DAConfig):
+    """jit-compiled ``fn(xq, packed)`` for one backend.  ``packed`` is a jit
+    *argument*: closing over it would bake the (possibly multi-GB) LUT array
+    into the compiled executable."""
+    return jax.jit(lambda xq, p, _f=spec.fn: _f(xq, p, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets + measured cost table (the "auto" policy)
+# ---------------------------------------------------------------------------
+
+_M_EDGES: Tuple[Tuple[int, str], ...] = ((8, "dec"), (256, "mid"))
+_KN_EDGES: Tuple[Tuple[int, str], ...] = ((1 << 14, "s"), (1 << 20, "m"))
+
+#: One representative (M, K, N) per (m-bucket, kn-bucket) cell, shared by the
+#: autotune benchmark (what it times) and the dispatch tests (what they probe).
+BUCKET_SHAPES: Dict[str, Tuple[int, int, int]] = {
+    "dec:s": (4, 64, 128),
+    "dec:m": (4, 512, 1024),
+    "dec:l": (4, 2048, 2048),
+    "mid:s": (64, 64, 128),
+    "mid:m": (64, 512, 1024),
+    "mid:l": (64, 2048, 2048),
+    "big:s": (512, 64, 128),
+    "big:m": (512, 512, 1024),
+    "big:l": (512, 2048, 2048),
+}
+
+
+def shape_bucket(m: int, k: int, n: int, x_bits: int) -> str:
+    """Fold (M, K, N, x_bits) into a coarse cost-table key.
+
+    M buckets: decode-like (≤8) / mid (≤256) / big.  K·N buckets: small
+    (≤2^14) / mid (≤2^20) / large.  x_bits is kept exact (4-bit inputs halve
+    the bit-serial cycle count, which shifts the backend ranking).
+    """
+    mb = next((tag for edge, tag in _M_EDGES if m <= edge), "big")
+    kb = next((tag for edge, tag in _KN_EDGES if k * n <= edge), "l")
+    return f"{mb}:{kb}:b{x_bits}"
+
+
+def default_cache_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_ENGINE_AUTOTUNE")
+    if env:
+        return pathlib.Path(env)
+    return (
+        pathlib.Path(__file__).resolve().parents[3]
+        / "artifacts" / "engine_autotune.json"
+    )
+
+
+_COST_TABLE: Optional[Dict[str, Dict[str, float]]] = None  # None → not loaded
+
+
+def load_cost_table(path: Optional[os.PathLike] = None) -> Dict[str, Dict[str, float]]:
+    """Lazily load the autotune cache: {bucket: {backend: µs}}.
+
+    Missing or unreadable caches degrade to the heuristic fallback — the
+    engine never *requires* autotuning to run.  A cache recording a
+    ``device`` other than the current ``jax.default_backend()`` is rejected
+    (a TPU-tuned table would steer CPU dispatch into interpret-mode Pallas
+    kernels, and vice versa); buckets are tuned at one ``group_size`` (the
+    ranking of the storage-free backends is group-independent, and LUT
+    eligibility is re-checked per artifact at dispatch time).
+
+    Only default-path loads populate the process-wide table that ``auto``
+    dispatch reads; loading an explicit ``path`` is read-only (use
+    :func:`set_cost_table` to install such a table deliberately).
+    """
+    global _COST_TABLE
+    if _COST_TABLE is not None and path is None:
+        return _COST_TABLE
+    p = pathlib.Path(path) if path is not None else default_cache_path()
+    table: Dict[str, Dict[str, float]] = {}
+    try:
+        raw = json.loads(p.read_text())
+        entries = raw.get("table", raw)
+        device = raw.get("device") if isinstance(raw, dict) else None
+        if device is not None and device != jax.default_backend():
+            entries = {}  # tuned on different hardware: fall back to heuristic
+        for bucket, costs in entries.items():
+            if isinstance(costs, dict):
+                table[bucket] = {
+                    b: float(us) for b, us in costs.items()
+                    if b in _REGISTRY and isinstance(us, (int, float))
+                }
+    except (OSError, ValueError, AttributeError):
+        table = {}
+    if path is None:
+        _COST_TABLE = table
+    return table
+
+
+def set_cost_table(table: Optional[Dict[str, Dict[str, float]]]) -> None:
+    """Install a cost table in-process (tests / autotune); None → reload."""
+    global _COST_TABLE
+    _COST_TABLE = dict(table) if table is not None else None
+
+
+def select_backend(
+    m: int, k: int, n: int, cfg: DAConfig, has_luts: bool = True
+) -> str:
+    """The ``"auto"`` policy: cheapest measured eligible DA backend, else the
+    deterministic heuristic.  Always returns a registered, eligible name."""
+    eligible = [
+        s for s in _REGISTRY.values()
+        if s.is_da and s.supports(cfg, has_luts, k=k)
+    ]
+    if not eligible:  # unreachable with the built-in backends, but be loud
+        raise ValueError(
+            f"no DA backend supports cfg={cfg} has_luts={has_luts}"
+        )
+    costs = load_cost_table().get(shape_bucket(m, k, n, cfg.x_bits), {})
+    timed = [s for s in eligible if s.name in costs]
+    if timed:
+        return min(timed, key=lambda s: costs[s.name]).name
+    return _fallback_backend(m, cfg, has_luts, eligible)
+
+
+def _fallback_backend(m, cfg, has_luts, eligible) -> str:
+    """No measurements: decode-like reads the PMAs, everything else runs the
+    one-matmul stacked bit-plane form (W read once — the TPU-shaped mapping)."""
+    names = {s.name for s in eligible}
+    if has_luts and m <= 8 and "lut" in names:
+        return "lut"
+    if "bitplane_stacked" in names:
+        return "bitplane_stacked"
+    return sorted(names)[0]
+
+
+# ---------------------------------------------------------------------------
+# Execution entry points
+# ---------------------------------------------------------------------------
+
+
+def _resolve_spec(
+    mode: Optional[str], m: int, k: int, n: int, cfg: DAConfig, has_luts: bool,
+    default_mode: str,
+) -> BackendSpec:
+    """Resolve a call-site mode to a backend spec, enforcing capabilities.
+
+    ``None`` defers to the artifact's packed default; ``"auto"`` always runs
+    shape-based dispatch (even on artifacts packed with a concrete mode).
+    Explicit modes are checked against the backend's capability spec so a
+    mismatch errors instead of silently computing wrong integers (e.g. the
+    int8 baseline fed unsigned 8-bit codes would wrap at 128).
+    """
+    mode = canonical_mode(default_mode if mode is None else mode)
+    if mode == "auto":
+        return _REGISTRY[select_backend(m, k, n, cfg, has_luts)]
+    spec = get_backend(mode)
+    if not spec.supports(cfg, has_luts, k=k):
+        why = (
+            "reads materialized LUTs but the PackedWeights artifact has none"
+            " — pack with a LUT mode or raise lut_cell_limit"
+            if spec.needs_luts and not has_luts
+            else "requires two's-complement (signed) activation codes"
+            if spec.signed_only and not cfg.x_signed
+            else f"supports group_size ≤ {spec.max_group_size}, got "
+            f"{cfg.group_size}"
+            if cfg.group_size > spec.max_group_size
+            else f"does not pad K: {k} is not a multiple of group_size "
+            f"{cfg.group_size}"
+        )
+        raise ValueError(f"backend {mode!r} {why}")
+    return spec
+
+
+def _check_lut_shape(spec: BackendSpec, packed: PackedWeights,
+                     cfg: DAConfig) -> None:
+    """A cfg override whose group_size disagrees with the packed LUTs would
+    silently gather wrong rows (addresses clamp/broadcast) — error instead."""
+    if spec.needs_luts and packed.luts.shape[-2] != (1 << cfg.group_size):
+        raise ValueError(
+            f"backend {spec.name!r}: LUTs were packed with "
+            f"{packed.luts.shape[-2]} rows per PMA but cfg.group_size="
+            f"{cfg.group_size} addresses {1 << cfg.group_size} — repack the "
+            f"weights or use the packed cfg"
+        )
+
+
+def da_vmm(
+    xq: jax.Array, packed: PackedWeights, mode: Optional[str] = None,
+    cfg: Optional[DAConfig] = None,
+) -> jax.Array:
+    """Integer-level engine entry: int codes [.., K] → int32 [.., N] == xq @ wq.
+
+    ``mode``: None → the artifact's packed default; ``"auto"`` → shape-based
+    dispatch; otherwise a registered backend name (capability-checked).
+    ``cfg`` overrides the packed config (e.g. to flip x_signed for unsigned
+    image inputs); group_size must match the packed LUTs.
+    """
+    cfg = cfg if cfg is not None else packed.cfg
+    m = 1
+    for d in xq.shape[:-1]:
+        m *= int(d)
+    spec = _resolve_spec(mode, m, packed.k, packed.n, cfg, packed.has_luts,
+                         default_mode=packed.mode)
+    _check_lut_shape(spec, packed, cfg)
+    lead = xq.shape[:-1]
+    x2 = xq.reshape(-1, xq.shape[-1]).astype(jnp.int32)
+    acc = spec.fn(x2, packed, cfg)
+    return acc.reshape(lead + (packed.n,))
+
+
+@partial(jax.jit, static_argnames=("cfg", "backend"))
+def _da_matmul_jit(x2, packed, cfg, backend):
+    xqt = quantize_acts_signed(x2, bits=cfg.x_bits)
+    acc = _REGISTRY[backend].fn(xqt.q, packed, cfg)
+    return acc.astype(jnp.float32) * xqt.scale * packed.w_scale
+
+
+def da_matmul(
+    x: jax.Array,
+    weights: PackedWeights,
+    cfg: Optional[DAConfig] = None,
+    mode: Optional[str] = None,
+) -> jax.Array:
+    """Float-level engine entry: quantize → DA integer VMM → dequantize.
+
+    x: [.., K] float; weights: a PackedWeights artifact.  ``mode``: None →
+    the artifact's packed default; ``"auto"`` → shape-based dispatch (always,
+    even on artifacts packed with a concrete mode); otherwise a registered
+    backend name or legacy alias (capability-checked).  Activations are
+    dynamically quantized to signed ``x_bits``.
+    """
+    cfg = cfg if cfg is not None else weights.cfg
+    scfg = dataclasses.replace(cfg, x_signed=True)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    m = 1
+    for d in lead:
+        m *= int(d)
+    spec = _resolve_spec(mode, m, weights.k, weights.n, scfg,
+                         weights.has_luts, default_mode=weights.mode)
+    _check_lut_shape(spec, weights, scfg)
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    y = _da_matmul_jit(x2, weights, scfg, spec.name)
+    return y.reshape(lead + (weights.n,))
+
+
+def dense(x: jax.Array, w) -> jax.Array:
+    """Weight application dispatching on the leaf type: a plain array is a
+    float matmul (training); a PackedWeights artifact runs the paper's
+    multiplier-free datapath through the engine (serving).  MoE-style stacked
+    experts ([E, K, N] against [E, C, K]) vmap the whole artifact per expert —
+    codes, scales and LUTs alike (None LUTs contribute no leaves)."""
+    if isinstance(w, PackedWeights):
+        if w.wq.ndim == 3:  # per-expert PMAs
+            if x.ndim == 4:  # grouped MoE activations [G, E, C, D]
+                return jax.vmap(lambda xg: dense(xg, w))(x)
+            assert x.ndim == 3, x.shape
+            return jax.vmap(lambda xe, we: we(xe))(x, w).astype(x.dtype)
+        return w(x).astype(x.dtype)
+    if w.ndim == 3 and x.ndim == 4:
+        return jnp.einsum("gecd,edf->gecf", x, w)
+    if w.ndim == 3 and x.ndim == 3:
+        return jnp.einsum("ecd,edf->ecf", x, w)
+    return x @ w

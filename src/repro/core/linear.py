@@ -1,132 +1,43 @@
-"""DA-quantized linear layer — the paper's technique as a first-class feature.
+"""DA-quantized linear layer — thin façade over the unified execution engine.
 
 Training uses float matmuls (DA requires one *constant* operand; weights change
-every step — the paper targets inference, §II-A). For serving, ``freeze_da``
-converts a float weight into the DA artifact (int8 codes + per-column scale +
-optionally the materialized weight-sum LUTs), and ``apply`` dispatches:
+every step — the paper targets inference, §II-A).  For serving, ``freeze_da``
+runs the pre-VMM step once (quantize + weight-sum LUTs) and returns the
+:class:`~repro.core.engine.PackedWeights` artifact; applying it dispatches
+through the engine's backend registry, so every mode the registry knows —
+``lut`` / ``onehot`` / ``bitplane`` / ``bitplane_stacked`` / the Pallas
+kernels / the ``int8`` baseline / shape-aware ``auto`` — is available from one
+surface with no per-call-site branching.
 
-  mode="float"     x @ W                          (training / baseline serving)
-  mode="int8"      int8×int8 reference matmul     (quantization-only baseline)
-  mode="da_lut"    faithful DA (LUT readout)      (paper's architecture)
-  mode="da_bitplane" storage-free DA              (deployable at LM scale)
-
-``da_lut`` costs 2^L/L× the weight storage (the paper's 56×-more-cells
-trade-off), so it is the default only for layers below ``lut_limit`` weights.
+``DAFrozenLinear`` is kept as a backward-compatible alias of PackedWeights.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.da import (
-    DAConfig,
-    build_luts,
-    da_vmm_bitplane,
-    da_vmm_bitplane_stacked,
-    da_vmm_lut,
+from repro.core.da import DAConfig
+from repro.core.engine import (  # noqa: F401  (dense/PackedWeights re-exported)
+    PackedWeights,
+    dense,
+    pack_weights,
 )
-from repro.core.quant import QTensor, quantize_acts_signed, quantize_weights
 
-
-@dataclasses.dataclass(frozen=True)
-class DAFrozenLinear:
-    """Inference-frozen DA linear: the PMA contents for one weight matrix."""
-
-    wq: jax.Array                 # [K, N] int32 codes
-    w_scale: jax.Array            # [1, N]
-    luts: Optional[jax.Array]     # [G, 2^L, N] or None (bitplane mode)
-    cfg: DAConfig
-    mode: str
-
-    def __call__(self, x: jax.Array) -> jax.Array:
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        xq = quantize_acts_signed(x2, bits=self.cfg.x_bits)
-        cfg = dataclasses.replace(self.cfg, x_signed=True)
-        if self.mode == "da_lut":
-            acc = da_vmm_lut(xq.q, self.luts, cfg)
-        elif self.mode == "da_bitplane":
-            acc = da_vmm_bitplane(xq.q, self.wq.astype(jnp.int32), cfg)
-        elif self.mode == "da_bitplane_stacked":
-            acc = da_vmm_bitplane_stacked(xq.q, self.wq, cfg)
-        elif self.mode == "int8":
-            acc = jnp.matmul(
-                xq.q.astype(jnp.int8), self.wq.astype(jnp.int8),
-                preferred_element_type=jnp.int32,
-            )
-        else:
-            raise ValueError(self.mode)
-        y = acc.astype(jnp.float32) * xq.scale * self.w_scale
-        return y.reshape(lead + (self.wq.shape[-1],))
+# Backward-compatible name: the frozen artifact IS the packed-weights container.
+DAFrozenLinear = PackedWeights
 
 
 def freeze_da(
     w: jax.Array,
     cfg: DAConfig = DAConfig(x_signed=True),
     mode: str = "auto",
-    lut_limit: int = 1 << 22,
-) -> DAFrozenLinear:
+    lut_cell_limit: int = 1 << 24,
+) -> PackedWeights:
     """Pre-VMM procedure (§III-A): quantize, sum weights, 'write the PMAs'.
 
     2-D weights [K, N] or batched 3-D [E, K, N] (per-expert PMAs for MoE).
+    ``mode`` is any registered engine backend (legacy ``da_*`` spellings are
+    accepted) or ``"auto"``: build LUTs when they fit ``lut_cell_limit`` — in LUT
+    **cells** per matrix, not weights (see ``engine.pack_weights``) — and let
+    the engine pick the backend per activation shape at run time.
     """
-    wq: QTensor = quantize_weights(w, bits=8, axis=w.ndim - 2)
-    if mode == "auto":
-        per_mat = w.shape[-2] * w.shape[-1]
-        mode = "da_lut" if per_mat <= lut_limit else "da_bitplane"
-    if mode == "da_lut":
-        build = build_luts
-        for _ in range(w.ndim - 2):
-            build = jax.vmap(build, in_axes=(0,), out_axes=0)
-        luts = build(wq.q)
-    else:
-        luts = None
-    # int8 storage: the codes are the deployable artifact (4× smaller reads)
-    return DAFrozenLinear(
-        wq=wq.q.astype(jnp.int8), w_scale=wq.scale, luts=luts, cfg=cfg,
-        mode=mode,
-    )
-
-
-def dense(x: jax.Array, w) -> jax.Array:
-    """Weight application that dispatches on the leaf type: a plain array is
-    a float matmul (training); a DAFrozenLinear runs the paper's multiplier-
-    free datapath (serving). MoE-style batched weights ([E,K,N] against
-    [E,C,K]) vmap the DA path per expert."""
-    if isinstance(w, DAFrozenLinear):
-        if w.wq.ndim == 3:  # per-expert PMAs
-            if x.ndim == 4:  # grouped MoE activations [G, E, C, D]
-                return jax.vmap(lambda xg: dense(xg, w))(x)
-            assert x.ndim == 3, x.shape
-            if w.luts is None:
-                y = jax.vmap(
-                    lambda xe, wqe, se: dataclasses.replace(w, wq=wqe, w_scale=se)(xe)
-                )(x, w.wq, w.w_scale)
-            else:
-                y = jax.vmap(
-                    lambda xe, wqe, se, le: dataclasses.replace(
-                        w, wq=wqe, w_scale=se, luts=le
-                    )(xe)
-                )(x, w.wq, w.w_scale, w.luts)
-            return y.astype(x.dtype)
-        return w(x).astype(x.dtype)
-    if w.ndim == 3 and x.ndim == 4:
-        return jnp.einsum("gecd,edf->gecf", x, w)
-    if w.ndim == 3 and x.ndim == 3:
-        return jnp.einsum("ecd,edf->ecf", x, w)
-    return x @ w
-
-
-jax.tree_util.register_pytree_with_keys(
-    DAFrozenLinear,
-    lambda t: (
-        (("wq", t.wq), ("w_scale", t.w_scale), ("luts", t.luts)),
-        (t.cfg, t.mode),
-    ),
-    lambda aux, ch: DAFrozenLinear(
-        wq=ch[0], w_scale=ch[1], luts=ch[2], cfg=aux[0], mode=aux[1]
-    ),
-)
+    return pack_weights(w, cfg, mode=mode, lut_cell_limit=lut_cell_limit)

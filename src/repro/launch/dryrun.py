@@ -69,8 +69,9 @@ def lower_cell(
     """Lower the cell's step function with full shardings. Returns (lowered,
     aux) — aux carries chips and MODEL_FLOPS for the roofline.
 
-    quant: None | "da_bitplane" | "da_lut" | "int8" — serve the DA-frozen
-    model (the paper's technique inside the distributed serving graph)."""
+    quant: None, "auto", or any registered engine backend name (legacy
+    "da_bitplane"/"da_lut" spellings accepted) — serve the DA-frozen model
+    (the paper's technique inside the distributed serving graph)."""
     if extra_cfg:
         cfg = dataclasses.replace(cfg, **extra_cfg)
     chips = mesh.size

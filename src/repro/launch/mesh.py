@@ -6,17 +6,38 @@ from __future__ import annotations
 import jax
 
 
-def _auto(axes):
-    return (jax.sharding.AxisType.Auto,) * len(axes)
+def shard_map_compat(f, mesh, in_specs, out_specs, check=False):
+    """jax.shard_map across jax versions: 0.4.x keeps it in experimental, and
+    the check flag was renamed check_rep → check_vma after the promotion, so
+    sniff the actual signature rather than keying on namespace presence."""
+    import inspect
+
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    kw = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: check})
+
+
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; Auto is the default there,
+    # so on older jax the plain call is equivalent.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod (TPU v5e pod slice); 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires XLA_FLAGS host device count ≥ prod)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return _make_mesh(shape, axes)

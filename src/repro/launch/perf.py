@@ -48,10 +48,14 @@ VARIANTS = {
         extra={"cache_mode": "slice"}, quant="da_bitplane_stacked"),
     # L6: flash-style chunked attention for long prefill
     "L6_chunked_attn": dict(extra={"attn_chunk_q": 2048}, quant=None),
-    # DA-quantized serving (the paper's technique in the serving graph)
+    # DA-quantized serving (the paper's technique in the serving graph).
+    # quant names are engine backends (repro.core.engine registry; legacy
+    # da_* spellings are canonicalized there).
     "DA_bitplane": dict(extra={}, quant="da_bitplane"),       # faithful serial
     "DA_stacked": dict(extra={}, quant="da_bitplane_stacked"),  # L7: one dot
     "DA_int8": dict(extra={}, quant="int8"),
+    # shape-aware engine dispatch: each layer picks its backend per (M,K,N)
+    "DA_auto": dict(extra={}, quant="auto"),
     "DA_stacked_combo": dict(
         extra={"attn_mask_mode": "additive", "softmax_dtype": "bfloat16"},
         quant="da_bitplane_stacked",

@@ -6,7 +6,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import dense
+from repro.core.engine import dense
 from repro.launch.sharding import constrain
 from repro.models.config import ModelConfig
 

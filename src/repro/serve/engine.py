@@ -5,6 +5,12 @@ weights (the paper's inference setting — weights constant, the DA precondition
 decode_32k / long_500k dry-run cells lower. The engine adds continuous
 batching on top: a slot-based scheduler admits requests into free batch rows,
 decodes all active rows each step, and retires rows on EOS/max-len.
+
+DA quantization is wired through the unified execution engine
+(repro.core.engine): pass ``da_mode`` — ``"auto"`` or any registered backend
+name — and float params are frozen into PackedWeights artifacts whose every
+linear runs the multiplier-free datapath; prefill (large M) and decode (M =
+batch) then dispatch to different backends under the same verified surface.
 """
 from __future__ import annotations
 
@@ -75,7 +81,17 @@ class ServeEngine:
         batch_size: int,
         max_len: int,
         greedy: bool = True,
+        da_mode: Optional[str] = None,
     ):
+        # da_mode: freeze float params through the unified DA engine ("auto"
+        # for shape-aware backend dispatch, or a registered backend name).
+        if da_mode is not None and da_mode != "float":
+            from repro.core.da import DAConfig
+            from repro.serve.quantize import freeze_model_da
+
+            params = freeze_model_da(
+                params, DAConfig(x_signed=True), mode=da_mode
+            )
         # the engine always uses the sliced prefill head (strictly better)
         cfg = dataclasses.replace(cfg, prefill_last_only=True)
         self.cfg = cfg

@@ -1,10 +1,15 @@
 """Freeze a trained model into DA serving form (the paper's pre-VMM step,
 applied model-wide).
 
-Every weight-matrix leaf becomes a DAFrozenLinear: int8 codes + per-column
-scale (+ materialized weight-sum LUTs below ``lut_limit`` — the paper's PMA
-contents). Routers, norms, biases, embeddings and scalar SSM params stay
-float: they are not VMMs (gather / elementwise), noted in DESIGN.md.
+Every weight-matrix leaf becomes a :class:`~repro.core.engine.PackedWeights`
+artifact: int8 codes + per-column scale (+ materialized weight-sum LUTs below
+``lut_cell_limit`` — the paper's PMA contents), built once and shared by every
+engine backend.  ``mode`` is any registered engine backend (legacy ``da_*``
+spellings are accepted) or ``"auto"`` — then the engine's shape-aware dispatch
+picks the backend per layer shape at run time, which is exactly the DAISM-
+style "choose the in-memory multiply strategy per layer" policy.  Routers,
+norms, biases, embeddings and scalar SSM params stay float: they are not VMMs
+(gather / elementwise), noted in DESIGN.md.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ from typing import Any
 import jax
 
 from repro.core.da import DAConfig
+from repro.core.engine import PackedWeights
 from repro.core.linear import freeze_da
 
 # Param leaf names that are weight matrices (x @ W shaped [in, out] or
@@ -30,15 +36,18 @@ def freeze_model_da(
     params: Any,
     da_cfg: DAConfig = DAConfig(x_signed=True),
     mode: str = "auto",
-    lut_limit: int = 1 << 22,
+    lut_cell_limit: int = 1 << 24,
 ) -> Any:
-    """Walk the param tree; replace weight leaves with DA-frozen linears."""
+    """Walk the param tree; replace weight leaves with packed DA artifacts.
+
+    ``lut_cell_limit`` bounds the LUT blow-up in **cells** per matrix (see
+    ``engine.pack_weights``)."""
 
     def walk(path, leaf):
         names = [_entry_name(p) for p in path]
         last = names[-1] if names else ""
         if last in DA_LEAF_NAMES and last not in SKIP_CONTEXT and leaf.ndim >= 2:
-            return freeze_da(leaf, da_cfg, mode=mode, lut_limit=lut_limit)
+            return freeze_da(leaf, da_cfg, mode=mode, lut_cell_limit=lut_cell_limit)
         return leaf
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
@@ -56,13 +65,11 @@ def _entry_name(entry) -> str:
 
 def da_memory_report(frozen_params: Any) -> dict:
     """The paper's Table-I trade-off at model scale: LUT cells vs weights."""
-    from repro.core.linear import DAFrozenLinear
-
     weights = luts = mats = 0
     for leaf in jax.tree.leaves(
-        frozen_params, is_leaf=lambda x: isinstance(x, DAFrozenLinear)
+        frozen_params, is_leaf=lambda x: isinstance(x, PackedWeights)
     ):
-        if isinstance(leaf, DAFrozenLinear):
+        if isinstance(leaf, PackedWeights):
             mats += 1
             weights += leaf.wq.size
             if leaf.luts is not None:

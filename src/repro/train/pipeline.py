@@ -25,6 +25,7 @@ def pipeline_forward(
     stage_params: Any,
     x_micro: jax.Array,
     axis: str,
+    n_stages: int = None,
 ):
     """Run inside shard_map. stage_params: this stage's layer stack;
     x_micro: [M, mb, ...] microbatches (same on every stage; only stage 0's
@@ -34,7 +35,10 @@ def pipeline_forward(
     t − s (if in range), then the activations ppermute one hop right.
     """
     s_idx = jax.lax.axis_index(axis)
-    n_stages = jax.lax.axis_size(axis)
+    if n_stages is None:
+        # static stage count; jax<0.5 has no lax.axis_size — callers with a
+        # mesh in hand pass it explicitly (make_pipeline_apply does)
+        n_stages = jax.lax.axis_size(axis)
     m = x_micro.shape[0]
     ticks = m + n_stages - 1
     buf = jnp.zeros_like(x_micro[0])
@@ -87,14 +91,17 @@ def make_pipelined_apply(
 
         def inner(sp, xm):
             sp = jax.tree.map(lambda a: a[0], sp)  # this stage's slice
-            return pipeline_forward(stage_fn, sp, xm, axis)
+            return pipeline_forward(stage_fn, sp, xm, axis,
+                                    n_stages=mesh.shape[axis])
 
-        shard = jax.shard_map(
+        from repro.launch.mesh import shard_map_compat
+
+        shard = shard_map_compat(
             inner,
             mesh=mesh,
             in_specs=(P(axis), P()),
             out_specs=P(),
-            check_vma=False,
+            check=False,
         )
         y_micro = shard(stage_params, x_micro)
         return y_micro.reshape((b,) + y_micro.shape[2:])

@@ -12,12 +12,22 @@ from repro.models.model import forward, init_caches, init_model
 
 KEY = jax.random.key(1)
 
+# Default (fast) runs check the attention rep; SSM decode equivalence is
+# covered by test_ssd's continuation test, and the full per-arch sweep rides
+# behind `-m slow` (multi-second jit compiles per config).
+REPRESENTATIVE = {"qwen3-8b"}
+ARCH_PARAMS = [
+    name if name in REPRESENTATIVE
+    else pytest.param(name, marks=pytest.mark.slow)
+    for name in sorted(ARCHS)
+]
+
 
 def _mk_pos(cfg, p1):
     return jnp.stack([p1, p1, p1], -1) if cfg.mrope_sections else p1
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_prefill_decode_matches_forward(name):
     cfg = dataclasses.replace(
         reduce_for_smoke(ARCHS[name]), moe_dropless=True
@@ -50,7 +60,11 @@ def test_prefill_decode_matches_forward(name):
         )
 
 
-@pytest.mark.parametrize("name", ["qwen3-8b", "phi3-medium-14b", "jamba-1.5-large-398b"])
+@pytest.mark.parametrize("name", [
+    "qwen3-8b",
+    pytest.param("phi3-medium-14b", marks=pytest.mark.slow),
+    pytest.param("jamba-1.5-large-398b", marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("chunk", [4, 5, 16])
 def test_chunked_attention_equals_naive(name, chunk):
     cfg = dataclasses.replace(reduce_for_smoke(ARCHS[name]), moe_dropless=True)
@@ -66,6 +80,7 @@ def test_chunked_attention_equals_naive(name, chunk):
     )
 
 
+@pytest.mark.slow
 def test_ragged_decode_positions():
     """Per-row cache positions: rows at different lengths decode exactly as
     their own full-forward would (continuous batching invariant)."""
@@ -101,10 +116,13 @@ def test_perf_levers_preserve_forward(lever):
     toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
     base, _ = forward(params, toks, cfg)
     got, _ = forward(params, toks, dataclasses.replace(cfg, **lever))
-    tol = 0.0 if lever.get("softmax_dtype", "float32") == "float32" else 0.1
+    exact = lever.get("softmax_dtype", "float32") == "float32"
+    tol = 0.0 if exact else 0.1
     assert float(jnp.abs(got - base).max()) <= tol
-    # top-1 predictions unchanged
-    assert bool(jnp.all(jnp.argmax(got, -1) == jnp.argmax(base, -1)))
+    # top-1 predictions unchanged (bf16 softmax is intentionally lossy, so
+    # near-tied logits of a random-init model may flip on a few positions)
+    agree = float(jnp.mean(jnp.argmax(got, -1) == jnp.argmax(base, -1)))
+    assert agree == 1.0 if exact else agree >= 0.9, agree
 
 
 def test_last_logit_only_matches():
@@ -117,6 +135,7 @@ def test_last_logit_only_matches():
                                atol=1e-6)
 
 
+@pytest.mark.slow
 def test_lean_attention_matches_reference():
     """L8 lean attention (hoisted bias, late divide) == reference softmax."""
     for name in ("qwen3-8b", "mistral-nemo-12b", "jamba-1.5-large-398b"):
@@ -131,6 +150,7 @@ def test_lean_attention_matches_reference():
                                    atol=2e-4, rtol=2e-3)
 
 
+@pytest.mark.slow
 def test_cache_slice_mode_matches_scatter():
     """L9: uniform-position dynamic_update_slice cache == scatter cache."""
     cfg0 = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]))

@@ -7,6 +7,10 @@ import textwrap
 
 import pytest
 
+# Each test compiles a sharded model in a fresh subprocess — multi-second by
+# construction. Run with `pytest -m slow`.
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -143,10 +147,11 @@ def test_compressed_allreduce_dp():
             mean, new_err = allreduce_compressed({"w": g_local}, err, "data")
             return mean["w"], new_err
 
-        f_sh = jax.shard_map(f, mesh=mesh,
-                             in_specs=(P("data"), {"w": P()}),
-                             out_specs=(P(), {"w": P()}),
-                             check_vma=False)
+        from repro.launch.mesh import shard_map_compat
+        f_sh = shard_map_compat(f, mesh=mesh,
+                                in_specs=(P("data"), {"w": P()}),
+                                out_specs=(P(), {"w": P()}),
+                                check=False)
         err0 = init_error({"w": jnp.zeros((64,))})
         mean, err = f_sh(g, err0)
         true_mean = jnp.mean(g, axis=0)

@@ -8,7 +8,7 @@ import pytest
 @pytest.mark.parametrize("example", [
     "examples/quickstart.py",
     "examples/lenet_da_inference.py",
-    "examples/lenet_full_da.py",
+    pytest.param("examples/lenet_full_da.py", marks=pytest.mark.slow),
 ])
 def test_example_runs(example, capsys):
     runpy.run_path(example, run_name="__main__")

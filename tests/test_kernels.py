@@ -11,13 +11,14 @@ from repro.kernels.da_vmm import da_vmm_pallas
 from repro.kernels.ops import bitplane_vmm, da_vmm
 
 SHAPES = [
-    # (M, K, N) incl. non-multiples of every tile dimension
+    # (M, K, N) incl. non-multiples of every tile dimension; the two largest
+    # interpret-mode shapes ride behind -m slow (seconds each on CPU)
     (1, 8, 1),
     (4, 25, 6),       # the paper's CONV1 workload
     (16, 64, 32),
     (33, 100, 17),
-    (300, 130, 70),
-    (64, 256, 128),
+    pytest.param(300, 130, 70, marks=pytest.mark.slow),
+    pytest.param(64, 256, 128, marks=pytest.mark.slow),
 ]
 
 

@@ -19,6 +19,15 @@ from repro.train.trainer import TrainConfig, init_state, make_train_step
 
 KEY = jax.random.key(0)
 
+# Default (fast) runs smoke one arch per mixer family; the full per-arch
+# sweep rides behind `-m slow` (multi-second jit compiles per config).
+REPRESENTATIVE = {"qwen3-8b", "mamba2-780m", "qwen2-moe-a2.7b"}
+ARCH_PARAMS = [
+    name if name in REPRESENTATIVE
+    else pytest.param(name, marks=pytest.mark.slow)
+    for name in sorted(ARCHS)
+]
+
 
 def _inputs(cfg, b=2, t=16):
     if cfg.modality == "text":
@@ -26,7 +35,7 @@ def _inputs(cfg, b=2, t=16):
     return jax.random.normal(KEY, (b, t, cfg.d_model), dtype=jnp.float32)
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_forward_smoke(name):
     cfg = reduce_for_smoke(ARCHS[name])
     params = init_model(KEY, cfg)
@@ -36,7 +45,15 @@ def test_forward_smoke(name):
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+# Train-step smokes pay a bigger jit bill; default runs one arch, the rest
+# ride behind -m slow.
+TRAIN_ARCH_PARAMS = [
+    name if name == "qwen3-8b" else pytest.param(name, marks=pytest.mark.slow)
+    for name in sorted(ARCHS)
+]
+
+
+@pytest.mark.parametrize("name", TRAIN_ARCH_PARAMS)
 def test_train_step_smoke(name):
     cfg = reduce_for_smoke(ARCHS[name])
     state = init_state(KEY, cfg)

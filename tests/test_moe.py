@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.registry import ARCHS, reduce_for_smoke
 from repro.models.config import ModelConfig
@@ -97,6 +98,7 @@ def test_shared_experts_add():
     np.testing.assert_allclose(y, y_routed + y_shared, atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_grad_finite():
     cfg = _cfg(moe_dropless=False)
     p = init_moe(KEY, cfg)

@@ -21,6 +21,7 @@ def _cfg(name="qwen3-8b", **kw):
     return dataclasses.replace(cfg, **kw) if kw else cfg
 
 
+@pytest.mark.slow
 def test_continuous_batching_matches_offline():
     cfg = _cfg()
     params = init_model(KEY, cfg)
@@ -39,19 +40,22 @@ def test_continuous_batching_matches_offline():
         assert done[uid].generated == toks[len(pr):], uid
 
 
+@pytest.mark.slow
 def test_freeze_model_da_replaces_weights():
     cfg = _cfg()
     params = init_model(KEY, cfg)
     frozen = freeze_model_da(params, DAConfig(x_signed=True), mode="da_lut")
-    kinds = [type(l).__name__ for l in jax.tree.leaves(
-        frozen, is_leaf=lambda x: isinstance(x, DAFrozenLinear))]
-    assert "DAFrozenLinear" in kinds
+    leaves = jax.tree.leaves(
+        frozen, is_leaf=lambda x: isinstance(x, DAFrozenLinear))
+    assert any(isinstance(l, DAFrozenLinear) for l in leaves)
     rep = da_memory_report(frozen)
     assert rep["da_matrices"] > 0
     assert rep["cell_blowup"] == pytest.approx(32.0, rel=0.01)  # 2^8/8
 
 
-@pytest.mark.parametrize("mode", ["da_lut", "da_bitplane", "int8"])
+@pytest.mark.parametrize("mode", [
+    pytest.param("da_lut", marks=pytest.mark.slow), "da_bitplane", "int8",
+])
 def test_da_serving_close_to_float(mode):
     """DA-frozen model output ≈ float model (int8 quantization error only),
     and the three integer modes are mutually bit-exact."""

@@ -1,8 +1,12 @@
-"""Mamba-2 SSD: chunked algorithm == naive recurrence == step chain."""
+"""Mamba-2 SSD: chunked algorithm == naive recurrence == step chain.
+
+Randomized coverage is seeded-numpy + parametrize (no hypothesis dependency):
+sequence lengths are drawn per seed so every chunk-boundary regime (t <
+chunk, t == chunk, ragged tail) is exercised deterministically.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.models.mamba2 import ssd_chunked, ssd_step
 
@@ -24,15 +28,11 @@ def _naive(x, dt, a, bm, cm):
     return ys, state
 
 
-@settings(max_examples=12, deadline=None)
-@given(
-    t=st.integers(1, 33),
-    chunk=st.sampled_from([1, 4, 16, 64]),
-    groups=st.sampled_from([1, 2]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_ssd_chunked_matches_recurrence(t, chunk, groups, seed):
-    rng = np.random.default_rng(seed)
+@pytest.mark.parametrize("chunk", [1, 4, 16, 64])
+@pytest.mark.parametrize("t,groups", [(1, 1), (16, 2), (33, 1), (33, 2)])
+def test_ssd_chunked_matches_recurrence(t, chunk, groups):
+    # t spans every chunk-boundary regime: t < chunk, t == chunk, ragged tail
+    rng = np.random.default_rng(t * 97 + chunk * 7 + groups)
     b, h, p, s = 2, 4, 8, 8
     x = rng.normal(size=(b, t, h, p)).astype(np.float32)
     dt = (np.abs(rng.normal(size=(b, t, h))) * 0.2).astype(np.float32)

@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.registry import ARCHS, reduce_for_smoke
 from repro.data.pipeline import DataConfig, batch_at, for_model, host_shard
@@ -47,6 +48,7 @@ def test_packed_mode_has_eos():
     assert (b["inputs"] == 0).any()  # EOS separators present
 
 
+@pytest.mark.slow
 def test_loss_decreases_and_restart_resumes(tmp_path):
     from repro.optim.adamw import AdamWConfig
 
@@ -71,6 +73,7 @@ def test_loss_decreases_and_restart_resumes(tmp_path):
     assert hist2[0]["step"] == 20  # resumed, not restarted
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     cfg = _tiny_cfg()
     dc = for_model(cfg, seq_len=16, global_batch=8, seed=2)
