@@ -1,10 +1,14 @@
 """Beyond-paper: the DA trade-off at LM scale.
 
-For each assigned architecture: freeze a reduced model with DA, report the
-LUT-cell blow-up (paper's 56× at CONV1 scale → 32× asymptotically for L=8),
-projected per-VMM energy/latency of a DA ReRAM engine for each distinct
-linear-layer shape, and the end-to-end top-1 agreement of DA serving vs
-float serving on random prompts.
+For each assigned architecture: freeze a reduced model through the DA
+artifact pipeline (per-layer planner — the DAISM-style policy), report the
+LUT-cell blow-up (paper's 56× at CONV1 scale → 32× asymptotically for L=8)
+per layer and in aggregate, projected per-VMM energy/latency of a DA ReRAM
+engine for each distinct linear-layer shape, and the end-to-end top-1
+agreement of DA serving vs float serving on random prompts.
+
+Everything runs through ``repro.core.engine`` / ``repro.core.freeze`` — the
+registry is the single execution entry point; no direct ``core.da`` calls.
 """
 from __future__ import annotations
 
@@ -15,10 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, reduce_for_smoke
-from repro.core.da import DAConfig
+from repro.core import DAConfig
+from repro.core.freeze import da_memory_report, freeze_model
 from repro.core.hwmodel import DADesign
 from repro.models.model import forward, init_model
-from repro.serve.quantize import da_memory_report, freeze_model_da
 
 
 def run(archs=("qwen3-8b", "qwen2-moe-a2.7b", "mamba2-780m")) -> list:
@@ -28,14 +32,29 @@ def run(archs=("qwen3-8b", "qwen2-moe-a2.7b", "mamba2-780m")) -> list:
         cfg = dataclasses.replace(reduce_for_smoke(ARCHS[name]),
                                   moe_dropless=True)
         params = init_model(key, cfg)
-        frozen = freeze_model_da(params, DAConfig(x_signed=True), mode="da_lut")
-        rep = da_memory_report(frozen)
+        art = freeze_model(params, DAConfig(x_signed=True), mode="lut",
+                           model_cfg=cfg)
+        rep = da_memory_report(art.params)
         toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
         ref, _ = forward(params, toks, cfg)
-        got, _ = forward(frozen, toks, cfg)
+        got, _ = forward(art.params, toks, cfg)
         agree = float(np.mean(np.asarray(
             jnp.argmax(ref, -1) == jnp.argmax(got, -1))))
         rows.append((name, rep["da_matrices"], rep["cell_blowup"], agree))
+
+    # per-layer plan of one planned freeze (mode chosen per shape, LUT bytes
+    # vs code bytes — the Table-I trade-off, inspectable per layer)
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
+                              moe_dropless=True)
+    art = freeze_model(init_model(key, cfg), DAConfig(x_signed=True),
+                       mode="auto", m_hint=4)
+    for row in da_memory_report(art.params)["layers"]:
+        rows.append((
+            f"plan_{row['layer']}",
+            row["mode"],
+            row["lut_bytes"] / 1e3,
+            row["code_bytes"] / 1e3,
+        ))
 
     # hardware projection for the real (full-size) layer shapes of qwen3-8b
     full = ARCHS["qwen3-8b"]
@@ -56,8 +75,8 @@ def run(archs=("qwen3-8b", "qwen2-moe-a2.7b", "mamba2-780m")) -> list:
 
 
 def main():
-    print("# DA at LM scale: arch, da_matrices|n_arrays, "
-          "blowup|latency_ns, top1_agree|energy_nJ")
+    print("# DA at LM scale: arch, da_matrices|n_arrays|mode, "
+          "blowup|latency_ns|lut_kB, top1_agree|energy_nJ|code_kB")
     for r in run():
         print(",".join(f"{v:.4g}" if isinstance(v, float) else str(v) for v in r))
 

@@ -36,6 +36,7 @@ from repro.core.engine import (
     jit_backend,
     lut_cells,
     pack_quantized,
+    registry_fingerprint,
     set_cost_table,
     shape_bucket,
     timeable_backends,
@@ -119,6 +120,11 @@ def main():
     payload = {
         "version": 1,
         "device": jax.default_backend(),
+        # Stamp the backend registry this cache was tuned against: a loader
+        # seeing a different fingerprint warns and falls back to the
+        # heuristic instead of trusting stale rankings (or KeyError-ing on
+        # renamed backends).
+        "registry": registry_fingerprint(),
         "group_size": args.group_size,
         "quick": args.quick,
         "table": table,

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.da import DAConfig, build_luts, da_vmm_lut
+from repro.core.da import DAConfig
+from repro.core.engine import da_vmm, pack_quantized
 from repro.core.hwmodel import BitSliceDesign, DADesign
 from repro.core.quant import quantize_weights
 
@@ -39,10 +40,11 @@ def run() -> dict:
     wq = quantize_weights(jnp.asarray(filters.reshape(6, 25).T))  # [25, 6]
     cols = im2col(img)  # [784, 25]
 
-    # DA path: 784 VMMs against the three PMAs (one LUT set)
-    luts = build_luts(wq.q)
+    # DA path: 784 VMMs against the three PMAs (one packed artifact, LUT mode
+    # through the unified engine — the same entry serving uses)
+    packed = pack_quantized(wq.q, cfg=DAConfig(x_signed=False))
     t0 = time.perf_counter()
-    acc = da_vmm_lut(jnp.asarray(cols), luts, DAConfig(x_signed=False))
+    acc = da_vmm(jnp.asarray(cols), packed, mode="lut")
     acc.block_until_ready()
     wall = time.perf_counter() - t0
 

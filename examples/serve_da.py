@@ -5,9 +5,17 @@ serving graph runs the multiplier-free datapath.
 
 Run: PYTHONPATH=src python examples/serve_da.py [--requests 8] [--mode auto]
 
-``--mode auto`` exercises the engine's shape-aware dispatch: layers whose
-LUTs fit memory read the PMAs on decode-like shapes, everything else runs the
-stacked bit-plane matmul — all behind one verified surface.
+``--mode auto`` runs the per-layer planner: each weight matrix gets its own
+(backend, group size, lut-or-not) decision from measured autotune timings
+with the analytic hardware model as fallback.
+
+Freeze-once, serve-many::
+
+    # freeze, persist the artifact, then serve from it
+    python examples/serve_da.py --save-artifact artifacts/qwen3_20m_da
+    # later / elsewhere: cold boot straight off disk — no float weights,
+    # no re-packing, the pre-VMM step never runs again
+    python examples/serve_da.py --artifact artifacts/qwen3_20m_da
 """
 import argparse
 import dataclasses
@@ -40,6 +48,18 @@ def build_cfg():
     )
 
 
+def print_plan(eng):
+    rep = da_memory_report(eng.params)
+    print(f"{rep['da_matrices']} weight matrices in DA form, "
+          f"LUT blow-up {rep['cell_blowup']:.1f}x aggregate")
+    for row in rep["layers"][:8]:
+        print(f"  {row['layer']:34s} {row['k']}x{row['n']:<6d} "
+              f"mode={row['mode']:<17s} codes={row['code_bytes']/1e3:.0f}kB "
+              f"luts={row['lut_bytes']/1e3:.0f}kB")
+    if len(rep["layers"]) > 8:
+        print(f"  ... {len(rep['layers']) - 8} more layers")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
@@ -48,21 +68,41 @@ def main():
                     choices=["auto", "lut", "onehot", "bitplane",
                              "bitplane_stacked", "int8", "float",
                              "da_lut", "da_bitplane"])  # legacy aliases
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="boot from a persisted DA artifact (no float "
+                         "weights, no re-packing)")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="after freezing, persist the artifact to DIR")
     args = ap.parse_args()
-
-    cfg = build_cfg()
-    params = init_model(jax.random.key(0), cfg)
-    print(f"model: {count_params(cfg)/1e6:.1f}M params")
+    if args.save_artifact and args.mode == "float":
+        raise SystemExit("--save-artifact requires a DA --mode (not float)")
+    if args.artifact and args.save_artifact:
+        raise SystemExit("--artifact and --save-artifact are mutually "
+                         "exclusive (the artifact already exists on disk)")
 
     t0 = time.perf_counter()
-    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=96,
-                      da_mode=args.mode)  # freezes through the unified engine
-    if args.mode != "float":
-        rep = da_memory_report(eng.params)
-        print(f"pre-VMM freeze ({args.mode}) in {time.perf_counter()-t0:.1f}s: "
-              f"{rep['da_matrices']} weight matrices -> DA form, "
-              f"LUT blow-up {rep['cell_blowup']:.0f}x" if rep["lut_cells"]
-              else f"pre-VMM freeze ({args.mode}): {rep['da_matrices']} matrices")
+    if args.artifact:
+        eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
+                                        max_len=96)
+        cfg = eng.cfg
+        print(f"cold boot from {args.artifact} in "
+              f"{time.perf_counter()-t0:.1f}s (zero float weights)")
+        print_plan(eng)
+    else:
+        cfg = build_cfg()
+        params = init_model(jax.random.key(0), cfg)
+        print(f"model: {count_params(cfg)/1e6:.1f}M params")
+        t0 = time.perf_counter()
+        eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=96,
+                          da_mode=args.mode)  # per-layer planned freeze
+        if args.mode != "float":
+            print(f"pre-VMM freeze ({args.mode}) in "
+                  f"{time.perf_counter()-t0:.1f}s:")
+            print_plan(eng)
+        if args.save_artifact:
+            path = eng.save_artifact(args.save_artifact)
+            print(f"artifact persisted to {path} — re-serve with "
+                  f"--artifact {path}")
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for uid in range(args.requests):

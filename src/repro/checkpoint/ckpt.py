@@ -9,9 +9,18 @@ device count: resharding is a device_put, not a format concern.
 
 Async mode hands the (host-side) arrays to a writer thread so the train loop
 only blocks for the device→host copy, not the disk write.
+
+DA-frozen trees round-trip too: a :class:`~repro.core.engine.PackedWeights`
+node flattens to its ``wq`` / ``w_scale`` / ``luts`` arrays (crc-checked like
+any leaf) and its aux data (DAConfig, default mode) is recorded in the
+manifest's ``"packed"`` table, so :func:`load_tree` can reassemble the
+artifact **without a template** — the serve-from-disk path never touches
+float weights.  :func:`save_tree` / :func:`load_tree` are the step-agnostic
+primitives ``repro.core.freeze`` builds its artifact pipeline on.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import queue
@@ -19,7 +28,7 @@ import re
 import shutil
 import threading
 import zlib
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
@@ -36,13 +45,9 @@ def _flatten(tree) -> dict:
 
 
 def _path_str(entry) -> str:
-    if hasattr(entry, "key"):
-        return str(entry.key)
-    if hasattr(entry, "idx"):
-        return str(entry.idx)
-    if hasattr(entry, "name"):
-        return str(entry.name)
-    return str(entry)
+    from repro.core.engine import path_entry_name
+
+    return path_entry_name(entry)
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -62,25 +67,58 @@ def _savable(v: np.ndarray) -> np.ndarray:
     return v
 
 
-def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
-    """Synchronous atomic save. Returns the checkpoint path."""
+def _packed_manifest(tree: Any) -> Dict[str, dict]:
+    """Manifest entries for PackedWeights nodes: path → aux data.
+
+    The arrays themselves flow through the normal flatten (the node is a
+    registered pytree with stable key names ``wq``/``w_scale``/``luts``);
+    this records what the flatten drops — the DAConfig and default mode —
+    keyed by the node's tree path, so a template-free load can rebuild the
+    artifact exactly.
+    """
+    from repro.core.engine import PackedWeights
+
+    meta: Dict[str, dict] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, PackedWeights)
+    )
+    for path, leaf in flat:
+        if isinstance(leaf, PackedWeights):
+            key = _SEP.join(_path_str(p) for p in path)
+            meta[key] = {
+                "cfg": dataclasses.asdict(leaf.cfg),
+                "mode": leaf.mode,
+                "has_luts": leaf.has_luts,
+            }
+    return meta
+
+
+def save_tree(directory: str, tree: Any,
+              extra_manifest: Optional[dict] = None) -> str:
+    """Atomic, checksummed write of one pytree to ``<directory>/``.
+
+    Writes ``arrays.npz`` + ``manifest.json`` into ``<directory>.tmp`` and
+    renames after fsync.  ``extra_manifest`` entries are merged into the
+    manifest (reserved keys: ``arrays``, ``packed``).  Returns ``directory``.
+    """
     flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
-    final = os.path.join(directory, f"step_{step:08d}")
+    final = directory.rstrip(os.sep)
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    npz_path = os.path.join(tmp, "arrays.npz")
-    np.savez(npz_path, **{k: _savable(v) for k, v in flat.items()})
-    manifest = {
-        "step": step,
-        "arrays": {
-            k: {
-                "shape": list(v.shape),
-                "dtype": str(v.dtype),
-                "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()),
-            }
-            for k, v in flat.items()
-        },
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k: _savable(v) for k, v in flat.items()})
+    manifest = dict(extra_manifest or {})
+    manifest["arrays"] = {
+        k: {
+            "shape": list(v.shape),
+            "dtype": str(v.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()),
+        }
+        for k, v in flat.items()
     }
+    packed = _packed_manifest(tree)
+    if packed:
+        manifest["packed"] = packed
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -88,6 +126,13 @@ def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    return final
+
+
+def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    final = save_tree(os.path.join(directory, f"step_{step:08d}"), tree,
+                      extra_manifest={"step": step})
     _gc(directory, keep)
     return final
 
@@ -114,34 +159,93 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _load_array(data, manifest, key: str, path: str) -> np.ndarray:
+    """One array out of the npz, un-byte-viewed and crc-verified."""
+    arr = data[key]
+    meta = manifest["arrays"][key]
+    true_dtype = _np_dtype(meta["dtype"])
+    if arr.dtype != true_dtype:  # byte-viewed exotic dtype
+        arr = arr.view(true_dtype).reshape(meta["shape"])
+    crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+    if crc != meta["crc32"]:
+        raise IOError(f"checksum mismatch for {key} in {path}")
+    return arr
+
+
+def load_tree(path: str, template: Any = None, shardings: Any = None) -> Any:
+    """Read a tree written by :func:`save_tree`, verifying every checksum.
+
+    With a ``template``: restore into its structure, cast to its dtypes, and
+    place each leaf with the matching ``shardings`` entry (or the template's
+    sharding) — the elastic-restart path.
+
+    Without a template (``template=None``): rebuild the tree **blind** from
+    the flat key paths — nested string-keyed dicts only (which is what model
+    param trees are).  Paths listed in the manifest's ``"packed"`` table are
+    reassembled into :class:`~repro.core.engine.PackedWeights` nodes with
+    their recorded DAConfig and mode — this is how a serving process boots a
+    DA artifact with zero float weights in scope.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    if template is not None:
+        flat_t = _flatten(template)
+        flat_s = _flatten(shardings) if shardings is not None else {}
+        out = {}
+        for key, tmpl in flat_t.items():
+            arr = _load_array(data, manifest, key, path)
+            arr = arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr
+            sh = flat_s.get(key)
+            if sh is None and hasattr(tmpl, "sharding"):
+                sh = tmpl.sharding
+            out[key] = jax.device_put(arr, sh) if sh is not None else arr
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(
+            treedef, [out[k] for k in flat_t.keys()])
+
+    # Template-free: nested dicts from key paths + PackedWeights reassembly.
+    from repro.core.da import DAConfig
+    from repro.core.engine import PackedWeights
+
+    import jax.numpy as jnp
+
+    packed_meta = manifest.get("packed", {})
+    root: dict = {}
+
+    def insert(key: str, value) -> None:
+        parts = key.split(_SEP)
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = value
+
+    consumed = set()
+    for prefix, meta in packed_meta.items():
+        fields = {}
+        for name in ("wq", "w_scale", "luts"):
+            key = f"{prefix}{_SEP}{name}"
+            if name == "luts" and not meta.get("has_luts", key in data):
+                fields[name] = None
+                continue
+            fields[name] = jnp.asarray(_load_array(data, manifest, key, path))
+            consumed.add(key)
+        insert(prefix, PackedWeights(
+            wq=fields["wq"], w_scale=fields["w_scale"], luts=fields["luts"],
+            cfg=DAConfig(**meta["cfg"]), mode=meta.get("mode", "auto"),
+        ))
+    for key in manifest["arrays"]:
+        if key not in consumed:
+            insert(key, _load_array(data, manifest, key, path))
+    return root
+
+
 def restore(directory: str, step: int, template: Any, shardings: Any = None) -> Any:
     """Restore into ``template``'s tree structure; verify checksums; place
     each leaf with the matching entry of ``shardings`` (or template sharding)
     — this is the elastic-restart path."""
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    flat_t = _flatten(template)
-    flat_s = _flatten(shardings) if shardings is not None else {}
-    out = {}
-    for key, tmpl in flat_t.items():
-        arr = data[key]
-        meta = manifest["arrays"][key]
-        true_dtype = _np_dtype(meta["dtype"])
-        if arr.dtype != true_dtype:  # byte-viewed exotic dtype
-            arr = arr.view(true_dtype).reshape(meta["shape"])
-        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
-        if crc != meta["crc32"]:
-            raise IOError(f"checksum mismatch for {key} in {path}")
-        arr = arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr
-        sh = flat_s.get(key)
-        if sh is None and hasattr(tmpl, "sharding"):
-            sh = tmpl.sharding
-        out[key] = jax.device_put(arr, sh) if sh is not None else arr
-    leaves_keys = list(_flatten(template).keys())
-    treedef = jax.tree_util.tree_structure(template)
-    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in leaves_keys])
+    return load_tree(os.path.join(directory, f"step_{step:08d}"),
+                     template, shardings)
 
 
 class AsyncCheckpointer:

@@ -19,6 +19,15 @@ from repro.core.engine import (  # noqa: F401
     registered_backends,
     select_backend,
 )
+from repro.core.freeze import (  # noqa: F401
+    DAArtifact,
+    LayerPlan,
+    da_memory_report,
+    freeze_model,
+    load_artifact,
+    plan_model,
+    save_artifact,
+)
 from repro.core.linear import DAFrozenLinear, freeze_da  # noqa: F401
 from repro.core.quant import (  # noqa: F401
     QTensor,

@@ -56,6 +56,12 @@ paper's pre-VMM step, §III-A) and shared by every backend.  It is a pytree
 (leaf names ``wq`` / ``w_scale`` / ``luts`` — stable for sharding rules), it
 is callable (``packed(x)`` runs the engine), and MoE-style stacked experts
 ``[E, K, N]`` vmap through it unchanged.
+
+This module is the *per-matrix* engine.  The **model-level** entry — walk a
+params pytree, plan a backend/group-size/LUT decision per layer from measured
++ analytic costs, pack every weight matrix, and serialize the result as a
+servable on-disk artifact — is :mod:`repro.core.freeze` (plan → pack →
+serialize → shard → serve).
 """
 from __future__ import annotations
 
@@ -63,6 +69,8 @@ import dataclasses
 import json
 import os
 import pathlib
+import warnings
+import zlib
 from functools import partial
 from typing import Callable, Dict, Optional, Tuple
 
@@ -135,6 +143,17 @@ def lut_cells(k: int, n: int, group_size: int) -> int:
     return num_groups(k, group_size) * (1 << group_size) * n
 
 
+def path_entry_name(entry) -> str:
+    """Canonical string for one pytree path entry (DictKey / GetAttrKey /
+    SequenceKey / raw str key).  The single implementation shared by
+    checkpoint keys, freeze plan keys and the sharding rules — serialized
+    key paths must never drift between writers and readers."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
 #: Default LUT budget in cells per matrix, shared by the serving freeze
 #: (pack_weights / freeze_da / freeze_model_da) AND the autotune benchmark —
 #: one constant so "which layers carry LUTs" and "which buckets time LUT
@@ -147,6 +166,7 @@ def pack_weights(
     cfg: DAConfig = DAConfig(x_signed=True),
     mode: str = "auto",
     lut_cell_limit: int = DEFAULT_LUT_LIMIT,
+    with_luts: Optional[bool] = None,
 ) -> PackedWeights:
     """Pre-VMM procedure (§III-A): quantize once, sum weights, 'write the PMAs'.
 
@@ -160,14 +180,19 @@ def pack_weights(
     seed's ``freeze_da`` bounded weight count instead; at group_size 8 one
     weight costs 32 cells, so the default 2^24 cells ≈ 64 MB of int32 LUTs
     admits layers up to ~512K weights.
+
+    ``with_luts`` (when not None) overrides the LUT decision outright — the
+    model-level planner (:mod:`repro.core.freeze`) decides lut-or-not per
+    layer and passes its verdict down here.
     """
     mode = canonical_mode(mode)
     wq: QTensor = quantize_weights(w, bits=8, axis=w.ndim - 2)
     k, n = w.shape[-2], w.shape[-1]
-    if mode == "auto":
-        with_luts = lut_cells(k, n, cfg.group_size) <= lut_cell_limit
-    else:
-        with_luts = get_backend(mode).needs_luts
+    if with_luts is None:
+        if mode == "auto":
+            with_luts = lut_cells(k, n, cfg.group_size) <= lut_cell_limit
+        else:
+            with_luts = get_backend(mode).needs_luts
     luts = None
     if with_luts:
         build = partial(build_luts, group_size=cfg.group_size)
@@ -281,6 +306,24 @@ def register_backend(name: str, **caps):
 def registered_backends() -> Dict[str, BackendSpec]:
     """Name → spec of every registered backend (the differential-test sweep)."""
     return dict(_REGISTRY)
+
+
+#: Bump when a backend's *implementation* changes performance-relevantly
+#: without a rename — invalidates every autotune cache.
+REGISTRY_VERSION = 1
+
+
+def registry_fingerprint() -> str:
+    """Fingerprint of the backend registry (sorted names + version).
+
+    Stamped into ``artifacts/engine_autotune.json`` by the autotune benchmark;
+    a cache whose fingerprint disagrees was tuned against a different backend
+    set (renamed / added / removed) and its numbers can't be trusted to rank
+    today's registry — the loader warns and falls back to the heuristic
+    instead of raising ``KeyError`` at dispatch time.
+    """
+    blob = f"v{REGISTRY_VERSION}:" + ",".join(sorted(_REGISTRY))
+    return f"{zlib.crc32(blob.encode()):08x}"
 
 
 def get_backend(mode: str) -> BackendSpec:
@@ -450,18 +493,36 @@ def load_cost_table(path: Optional[os.PathLike] = None) -> Dict[str, Dict[str, f
         return _COST_TABLE
     p = pathlib.Path(path) if path is not None else default_cache_path()
     table: Dict[str, Dict[str, float]] = {}
+    unknown: set = set()
     try:
         raw = json.loads(p.read_text())
         entries = raw.get("table", raw)
         device = raw.get("device") if isinstance(raw, dict) else None
         if device is not None and device != jax.default_backend():
             entries = {}  # tuned on different hardware: fall back to heuristic
+        stamp = raw.get("registry") if isinstance(raw, dict) else None
+        if stamp is not None and stamp != registry_fingerprint():
+            warnings.warn(
+                f"autotune cache {p} was tuned against a different backend "
+                f"registry (stamp {stamp!r} != {registry_fingerprint()!r}); "
+                "ignoring it — re-run benchmarks/engine_autotune.py",
+                stacklevel=2,
+            )
+            entries = {}
         for bucket, costs in entries.items():
             if isinstance(costs, dict):
+                unknown.update(b for b in costs if b not in _REGISTRY)
                 table[bucket] = {
                     b: float(us) for b, us in costs.items()
                     if b in _REGISTRY and isinstance(us, (int, float))
                 }
+        if unknown:
+            warnings.warn(
+                f"autotune cache {p} names unregistered backends "
+                f"{sorted(unknown)}; their timings are dropped (heuristic "
+                "fallback where no eligible backend was timed)",
+                stacklevel=2,
+            )
     except (OSError, ValueError, AttributeError):
         table = {}
     if path is None:

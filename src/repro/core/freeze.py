@@ -1,0 +1,490 @@
+"""Model-level DA freeze: plan → pack → serialize → shard → serve.
+
+The paper's premise is that the weight matrix is *constant* (§II-A): all the
+expensive work — quantizing weights and precomputing the weight-sum LUTs (the
+PMA contents, §III-A) — happens once, offline, and inference is shift-and-add
+readout.  This module makes that premise operational at model scale:
+
+1. **Plan** (:func:`plan_model`): for every weight-matrix leaf of a params
+   pytree, choose a backend mode, group size and lut-or-not from the layer's
+   (K, N) shape and the expected decode batch.  Measured autotune timings
+   (``artifacts/engine_autotune.json``) rank the backends when the bucket was
+   tuned on this host; otherwise the analytic hardware cost model
+   (:mod:`repro.core.hwmodel`) ranks them — the DAISM-style "choose the
+   in-memory multiply strategy per layer" policy, never a constant choice.
+2. **Pack** (:func:`freeze_model`): run the pre-VMM step per leaf under its
+   plan, producing a :class:`DAArtifact` — the packed params pytree plus the
+   plan, DA config, and (optionally) the model config.
+3. **Serialize** (:func:`save_artifact` / :func:`load_artifact`): persist the
+   artifact via the checkpoint layer (crc-checked arrays, DAConfig + plan in
+   the manifest) so a serving process boots from disk with **zero float
+   weights and zero re-packing** — see ``ServeEngine.from_artifact`` and
+   ``examples/serve_da.py --artifact``.
+4. **Shard**: packed leaf names (``wq`` / ``w_scale`` / ``luts``) have
+   sharding rules in :mod:`repro.launch.sharding`
+   (``shard_frozen_params``) — a frozen model tensor-parallels its PMAs
+   across the mesh like any other param.
+
+Routers, norms, biases, embeddings and scalar SSM params stay float: they are
+not VMMs (gather / elementwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import warnings
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.da import DAConfig
+from repro.core.engine import (
+    DEFAULT_LUT_LIMIT,
+    PackedWeights,
+    canonical_mode,
+    get_backend,
+    load_cost_table,
+    lut_cells,
+    pack_weights,
+    path_entry_name,
+    registered_backends,
+    registry_fingerprint,
+    shape_bucket,
+)
+from repro.core.hwmodel import DADesign, T_ADD_STAGE, T_READ_PIPE
+
+#: Artifact schema version — bumped on any layout/manifest change.
+ARTIFACT_VERSION = 1
+ARTIFACT_FORMAT = "da-artifact"
+
+# Param leaf names that are weight matrices (x @ W shaped [in, out] or
+# batched expert weights [E, in, out]).
+DA_LEAF_NAMES = {
+    "wq", "wk", "wv", "wo",          # attention projections
+    "w_up", "w_gate", "w_down",      # MLP / MoE experts / shared experts
+    "in_proj", "out_proj",           # mamba projections
+    "w",                             # lm head
+}
+SKIP_CONTEXT = {"router", "conv_w", "table"}
+
+_SEP = "/"
+
+
+# ---------------------------------------------------------------------------
+# Plan schema
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer's freeze decision: what to pack and how to execute it.
+
+    mode:        concrete backend name this layer serves under.
+    group_size:  rows per PMA for this layer (LUT addressability).
+    with_luts:   materialize the weight-sum LUTs (the PMA write) or not.
+    k, n:        the weight matrix shape the plan was made for.
+    source:      "measured" (autotune bucket timing), "analytic" (hwmodel
+                 fallback — no timing for this bucket on this host), or
+                 "pinned" (a concrete mode was requested, no planning).
+    est_cost:    the winning backend's estimated cost — µs when measured,
+                 model-ns when analytic, NaN when pinned.
+    """
+
+    mode: str
+    group_size: int
+    with_luts: bool
+    k: int
+    n: int
+    source: str = "analytic"
+    # informational, not identity: NaN (pinned plans) would poison ==
+    est_cost: float = dataclasses.field(default=float("nan"), compare=False)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        if not math.isfinite(d["est_cost"]):
+            d["est_cost"] = None  # a bare NaN literal breaks strict JSON
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "LayerPlan":
+        d = dict(d)
+        if d.get("est_cost") is None:
+            d["est_cost"] = float("nan")
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class DAArtifact:
+    """The frozen, servable model: packed params + the plan that shaped them.
+
+    params:    pytree with :class:`PackedWeights` at every weight-matrix leaf
+               (non-VMM leaves stay float).
+    plan:      leaf path (``periods/pos_0/mixer/wq``) → :class:`LayerPlan`.
+    da_cfg:    base DAConfig the model was frozen under (per-layer group
+               sizes may differ — each PackedWeights carries its own cfg).
+    model_cfg: the ModelConfig needed to rebuild the serving graph, or None
+               for bare trees (round-tripped through the manifest).
+    """
+
+    params: Any
+    plan: Dict[str, LayerPlan]
+    da_cfg: DAConfig
+    model_cfg: Any = None
+    version: int = ARTIFACT_VERSION
+
+
+# ---------------------------------------------------------------------------
+# The planner: measured costs with the analytic hwmodel as fallback
+# ---------------------------------------------------------------------------
+
+
+def analytic_costs(
+    m: int, k: int, n: int, cfg: DAConfig, has_luts: bool
+) -> Dict[str, float]:
+    """Analytic per-backend latency proxies (model-ns) from the hwmodel.
+
+    Used when no autotune measurement covers a layer's bucket.  These are the
+    *paper's hardware* numbers, not host timings: the PMA readout streams
+    ``x_bits`` read cycles per input row (``DADesign.latency_ns``), the
+    one-hot decode touches the full 2^L/L-blown-up LUT per readout, and the
+    storage-free bit-plane forms pay a K·N multiply-accumulate sweep per bit
+    plane (one adder stage per MAC) plus a weight-array read — once per plane
+    for ``bitplane``, once total for ``bitplane_stacked``.  Only the ranking
+    matters; absolute values are model-scale ns.
+    """
+    costs: Dict[str, float] = {}
+    x_bits = cfg.x_bits
+    mac_sweep = float(m) * k * n * T_ADD_STAGE
+    w_read = float(k) * n * T_READ_PIPE
+    if has_luts:
+        d = DADesign(k=k, n=n, x_bits=x_bits, base_group=cfg.group_size)
+        readout = m * d.latency_ns()
+        costs["lut"] = readout
+        costs["pallas_lut"] = readout
+        costs["onehot"] = readout * ((1 << cfg.group_size) / cfg.group_size)
+    costs["bitplane"] = x_bits * (mac_sweep + w_read)
+    costs["pallas_bitplane"] = costs["bitplane"]
+    costs["bitplane_stacked"] = x_bits * mac_sweep + w_read
+    return costs
+
+
+def plan_layer(
+    k: int,
+    n: int,
+    da_cfg: DAConfig,
+    m_hint: int = 4,
+    lut_cell_limit: int = DEFAULT_LUT_LIMIT,
+    cost_table: Optional[Dict[str, Dict[str, float]]] = None,
+    group_size_candidates: Optional[Sequence[int]] = None,
+) -> LayerPlan:
+    """Choose (mode, group_size, lut-or-not) for one K×N weight matrix.
+
+    ``m_hint`` is the expected serving batch (decode M); it selects the cost
+    bucket.  For each candidate group size: decide LUT feasibility against
+    ``lut_cell_limit``, rank the *eligible* DA backends by measured bucket
+    timing when available (``cost_table``, default the process autotune
+    table), else by :func:`analytic_costs`; the cheapest candidate wins, ties
+    to the first (the base group size).  Measured and analytic costs are
+    never compared against each other — a candidate set mixing both ranks
+    measured candidates first (trust timings over models).  Autotune buckets
+    are timed at ONE group size (the base), so only the base candidate may
+    claim measurement provenance; alternative group sizes rank analytically.
+    """
+    table = cost_table if cost_table is not None else load_cost_table()
+    candidates = tuple(group_size_candidates or (da_cfg.group_size,))
+    best: Optional[Tuple[int, float, LayerPlan]] = None  # (rank, cost, plan)
+    for gs in candidates:
+        cfg = dataclasses.replace(da_cfg, group_size=gs)
+        with_luts = lut_cells(k, n, gs) <= lut_cell_limit
+        eligible = [
+            s for s in registered_backends().values()
+            if s.is_da and s.supports(cfg, with_luts, k=k)
+        ]
+        if not eligible:
+            continue
+        measured = (table.get(shape_bucket(m_hint, k, n, cfg.x_bits), {})
+                    if gs == da_cfg.group_size else {})
+        timed = {s.name: measured[s.name] for s in eligible
+                 if s.name in measured}
+        if timed:
+            mode = min(timed, key=timed.get)
+            rank, source, cost = 0, "measured", timed[mode]
+        else:
+            analytic = analytic_costs(m_hint, k, n, cfg, with_luts)
+            scored = {s.name: analytic[s.name] for s in eligible
+                      if s.name in analytic}
+            if not scored:  # registry grew a backend the model doesn't know
+                scored = {min(eligible, key=lambda s: s.name).name: 0.0}
+            mode = min(scored, key=scored.get)
+            rank, source, cost = 1, "analytic", scored[mode]
+        plan = LayerPlan(mode=mode, group_size=gs, with_luts=with_luts,
+                         k=k, n=n, source=source, est_cost=cost)
+        if best is None or (rank, cost) < best[:2]:
+            best = (rank, cost, plan)
+    if best is None:  # unreachable with built-in backends, but be loud
+        raise ValueError(f"no DA backend eligible for K={k} N={n} "
+                         f"candidates={candidates}")
+    return best[2]
+
+
+def _path_key(path) -> str:
+    return _SEP.join(path_entry_name(p) for p in path)
+
+
+def _is_da_leaf(path, leaf) -> bool:
+    names = [path_entry_name(p) for p in path]
+    if not names or any(n in SKIP_CONTEXT for n in names):
+        return False  # router / conv / embedding subtrees stay float
+    return (names[-1] in DA_LEAF_NAMES
+            and hasattr(leaf, "ndim") and leaf.ndim >= 2)
+
+
+def plan_model(
+    params: Any,
+    da_cfg: DAConfig = DAConfig(x_signed=True),
+    m_hint: int = 4,
+    lut_cell_limit: int = DEFAULT_LUT_LIMIT,
+    cost_table: Optional[Dict[str, Dict[str, float]]] = None,
+    group_size_candidates: Optional[Sequence[int]] = None,
+) -> Dict[str, LayerPlan]:
+    """Per-layer plans for every weight-matrix leaf of ``params`` (no packing).
+
+    Leaves stacked over periods/experts ([P, K, N] / [P, E, K, N]) get one
+    plan from their trailing (K, N) — every period shares the layer shape.
+    """
+    plans: Dict[str, LayerPlan] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        if _is_da_leaf(path, leaf):
+            plans[_path_key(path)] = plan_layer(
+                int(leaf.shape[-2]), int(leaf.shape[-1]), da_cfg,
+                m_hint=m_hint, lut_cell_limit=lut_cell_limit,
+                cost_table=cost_table,
+                group_size_candidates=group_size_candidates,
+            )
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Freeze: pack every planned leaf
+# ---------------------------------------------------------------------------
+
+
+def freeze_model(
+    params: Any,
+    da_cfg: DAConfig = DAConfig(x_signed=True),
+    mode: str = "auto",
+    m_hint: int = 4,
+    lut_cell_limit: int = DEFAULT_LUT_LIMIT,
+    model_cfg: Any = None,
+    cost_table: Optional[Dict[str, Dict[str, float]]] = None,
+    group_size_candidates: Optional[Sequence[int]] = None,
+    pin_modes: bool = True,
+) -> DAArtifact:
+    """Walk the param tree; pack every weight leaf under its per-layer plan.
+
+    ``mode="auto"`` runs the planner (measured + analytic costs).  A concrete
+    ``mode`` (any registered backend, legacy ``da_*`` spellings accepted)
+    pins every layer to it — the one-size-fits-all escape hatch.
+
+    ``pin_modes=True`` bakes each layer's planned backend into its
+    ``PackedWeights`` default, so serving needs no dispatch machinery (and a
+    cold process reproduces the planner's choices exactly); LUTs are then
+    only materialized when the pinned backend actually reads them.
+    ``pin_modes=False`` packs per the plan but leaves ``mode="auto"`` for
+    runtime shape dispatch (prefill and decode may then use different
+    backends on the same artifact), keeping every feasible LUT.
+    """
+    mode = canonical_mode(mode)
+    planned = mode == "auto"
+    plans: Dict[str, LayerPlan] = {}
+
+    def walk(path, leaf):
+        if not _is_da_leaf(path, leaf):
+            return leaf
+        k, n = int(leaf.shape[-2]), int(leaf.shape[-1])
+        if planned:
+            plan = plan_layer(
+                k, n, da_cfg, m_hint=m_hint, lut_cell_limit=lut_cell_limit,
+                cost_table=cost_table,
+                group_size_candidates=group_size_candidates,
+            )
+            if pin_modes and not get_backend(plan.mode).needs_luts:
+                # The pinned backend never reads PMAs: materializing them
+                # would write up to 2^L/L× dead cells into every artifact.
+                # (Un-pinned artifacts keep feasible LUTs — runtime dispatch
+                # may still pick a LUT backend at other shapes.)
+                plan = dataclasses.replace(plan, with_luts=False)
+        else:
+            plan = LayerPlan(
+                mode=mode, group_size=da_cfg.group_size,
+                with_luts=get_backend(mode).needs_luts, k=k, n=n,
+                source="pinned",
+            )
+        plans[_path_key(path)] = plan
+        cfg = dataclasses.replace(da_cfg, group_size=plan.group_size)
+        return pack_weights(
+            leaf, cfg,
+            mode=plan.mode if (pin_modes or not planned) else "auto",
+            with_luts=plan.with_luts,
+        )
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    packed = jax.tree_util.tree_unflatten(
+        treedef, [walk(path, leaf) for path, leaf in flat]
+    )
+    return DAArtifact(params=packed, plan=plans, da_cfg=da_cfg,
+                      model_cfg=model_cfg)
+
+
+def freeze_model_da(
+    params: Any,
+    da_cfg: DAConfig = DAConfig(x_signed=True),
+    mode: str = "auto",
+    lut_cell_limit: int = 1 << 24,
+) -> Any:
+    """Legacy surface: freeze and return only the packed params pytree."""
+    return freeze_model(params, da_cfg, mode=mode,
+                        lut_cell_limit=lut_cell_limit).params
+
+
+# ---------------------------------------------------------------------------
+# Serialize / load (the serve-many half of freeze-once)
+# ---------------------------------------------------------------------------
+
+
+def save_artifact(directory: str, artifact: DAArtifact) -> str:
+    """Persist a DAArtifact: ``<dir>/arrays.npz`` + ``manifest.json``.
+
+    Atomic (write to ``<dir>.tmp``, fsync, rename) and crc-checked per array
+    via the checkpoint layer; the manifest carries the DA config, the full
+    per-layer plan, the model config, and the backend-registry fingerprint
+    so a loader can tell when the plan references backends that no longer
+    exist.
+    """
+    from repro.checkpoint import ckpt
+
+    extra = {
+        "format": ARTIFACT_FORMAT,
+        "artifact_version": artifact.version,
+        "da_cfg": dataclasses.asdict(artifact.da_cfg),
+        "plan": {k: p.to_json() for k, p in artifact.plan.items()},
+        "registry": registry_fingerprint(),
+    }
+    if artifact.model_cfg is not None:
+        extra["model_cfg"] = dataclasses.asdict(artifact.model_cfg)
+    return ckpt.save_tree(directory, artifact.params, extra_manifest=extra)
+
+
+def load_artifact(directory: str) -> DAArtifact:
+    """Boot a DAArtifact from disk: no float weights, no re-packing.
+
+    The packed params are reconstructed template-free (the manifest records
+    which paths are PackedWeights and their DAConfig/mode), arrays are
+    crc-verified, and each layer's planned mode is validated against the
+    live backend registry — a plan naming a backend that no longer exists
+    degrades that layer to ``mode="auto"`` with a warning instead of raising
+    ``KeyError`` at dispatch time.
+    """
+    from repro.checkpoint import ckpt
+
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != ARTIFACT_FORMAT:
+        raise IOError(
+            f"{directory} is not a DA artifact (format="
+            f"{manifest.get('format')!r}); expected {ARTIFACT_FORMAT!r}"
+        )
+    if manifest.get("artifact_version", 0) > ARTIFACT_VERSION:
+        raise IOError(
+            f"artifact version {manifest['artifact_version']} is newer than "
+            f"this build understands ({ARTIFACT_VERSION})"
+        )
+    params = ckpt.load_tree(directory)
+    plan = {k: LayerPlan.from_json(p)
+            for k, p in manifest.get("plan", {}).items()}
+    registry = registered_backends()
+    stale = sorted({p.mode for p in plan.values() if p.mode not in registry})
+    if stale:
+        warnings.warn(
+            f"artifact {directory} was planned for backends {stale} that are "
+            "not registered in this build; those layers fall back to "
+            "mode='auto' dispatch", stacklevel=2,
+        )
+        params = _demote_stale_modes(params, set(stale))
+        plan = {k: (dataclasses.replace(p, mode="auto", source="stale")
+                    if p.mode in stale else p)
+                for k, p in plan.items()}
+    da_cfg = DAConfig(**manifest["da_cfg"])
+    model_cfg = None
+    if "model_cfg" in manifest:
+        from repro.models.config import ModelConfig
+
+        raw = dict(manifest["model_cfg"])
+        for key in ("mrope_sections",):  # JSON lists → tuples
+            if raw.get(key) is not None:
+                raw[key] = tuple(raw[key])
+        model_cfg = ModelConfig(**raw)
+    return DAArtifact(params=params, plan=plan, da_cfg=da_cfg,
+                      model_cfg=model_cfg,
+                      version=manifest.get("artifact_version", 1))
+
+
+def _demote_stale_modes(params: Any, stale: set) -> Any:
+    def demote(leaf):
+        if isinstance(leaf, PackedWeights) and leaf.mode in stale:
+            return dataclasses.replace(leaf, mode="auto")
+        return leaf
+
+    return jax.tree.map(
+        demote, params, is_leaf=lambda x: isinstance(x, PackedWeights)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reporting: the Table-I trade-off, per layer
+# ---------------------------------------------------------------------------
+
+
+def da_memory_report(frozen_params: Any) -> dict:
+    """The paper's Table-I trade-off at model scale — aggregate AND per layer.
+
+    Besides the aggregate cell counts, ``"layers"`` lists every packed matrix
+    with its plan decision (mode chosen, group size) and its storage split
+    (int8 code bytes vs int32 LUT bytes), so the 2^L/L blow-up is
+    inspectable layer by layer, not just in aggregate.
+    """
+    weights = luts = mats = 0
+    layers = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        frozen_params, is_leaf=lambda x: isinstance(x, PackedWeights)
+    )
+    for path, leaf in flat:
+        if not isinstance(leaf, PackedWeights):
+            continue
+        mats += 1
+        weights += leaf.wq.size
+        lut_sz = leaf.luts.size if leaf.luts is not None else 0
+        luts += lut_sz
+        layers.append({
+            "layer": _path_key(path),
+            "mode": leaf.mode,
+            "group_size": leaf.cfg.group_size,
+            "k": int(leaf.k),
+            "n": int(leaf.n),
+            "with_luts": leaf.has_luts,
+            "code_bytes": int(leaf.wq.size) * leaf.wq.dtype.itemsize,
+            "scale_bytes": int(leaf.w_scale.size) * leaf.w_scale.dtype.itemsize,
+            "lut_bytes": int(lut_sz) * (leaf.luts.dtype.itemsize
+                                        if leaf.luts is not None else 0),
+            "cell_blowup": (lut_sz / leaf.wq.size) if leaf.wq.size else 0.0,
+        })
+    return {
+        "da_matrices": mats,
+        "weight_cells": weights,
+        "lut_cells": luts,
+        "cell_blowup": (luts / weights) if weights else 0.0,
+        "layers": layers,
+    }

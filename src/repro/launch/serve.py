@@ -2,6 +2,10 @@
 
   python -m repro.launch.serve --arch qwen3-8b --smoke --quant da8 \
       --requests 16 --batch 4
+
+Freeze-once, serve-many: ``--quant da8-plan --save-artifact DIR`` persists
+the planned DA artifact; a later ``--artifact DIR`` boots straight from disk
+(no --arch, no float init, no re-packing).
 """
 import argparse
 import time
@@ -9,15 +13,25 @@ import time
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--quant", default="none",
-                    choices=["none", "int8", "da8", "da8-lut"])
+                    choices=["none", "int8", "da8", "da8-lut", "da8-plan"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="boot from a persisted DA artifact (cold serve path)")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="persist the frozen artifact after the pre-VMM step")
     args = ap.parse_args()
+    if args.artifact and (args.save_artifact or args.quant != "none"
+                          or args.smoke or args.arch):
+        raise SystemExit("--artifact boots a finished artifact; it conflicts "
+                         "with --arch/--smoke/--quant/--save-artifact")
+    if args.save_artifact and args.quant == "none":
+        raise SystemExit("--save-artifact requires a DA --quant mode")
 
     import dataclasses
 
@@ -25,29 +39,42 @@ def main():
     import numpy as np
 
     from repro.configs.registry import ARCHS, reduce_for_smoke
-    from repro.core.da import DAConfig
     from repro.models.model import count_params, init_model
     from repro.serve.engine import Request, ServeEngine
-    from repro.serve.quantize import da_memory_report, freeze_model_da
+    from repro.serve.quantize import da_memory_report
 
-    cfg = ARCHS[args.arch]
-    if args.smoke:
-        cfg = reduce_for_smoke(cfg)
-    cfg = dataclasses.replace(cfg, moe_dropless=True)
-    if cfg.modality != "text":
-        raise SystemExit(f"{cfg.name} has a stub frontend; serve text archs")
+    if args.artifact:
+        eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
+                                        max_len=args.max_len)
+        cfg = eng.cfg
+        print(f"arch={cfg.name} cold boot from {args.artifact} "
+              "(zero float weights)")
+    else:
+        if args.arch is None:
+            raise SystemExit("--arch is required unless booting --artifact")
+        cfg = ARCHS[args.arch]
+        if args.smoke:
+            cfg = reduce_for_smoke(cfg)
+        cfg = dataclasses.replace(cfg, moe_dropless=True)
+        if cfg.modality != "text":
+            raise SystemExit(
+                f"{cfg.name} has a stub frontend; serve text archs")
 
-    params = init_model(jax.random.key(0), cfg)
-    print(f"arch={cfg.name} params={count_params(cfg)/1e6:.1f}M quant={args.quant}")
-    if args.quant != "none":
-        mode = {"int8": "int8", "da8": "da_bitplane", "da8-lut": "da_lut"}[args.quant]
-        params = freeze_model_da(params, DAConfig(x_signed=True), mode=mode)
-        rep = da_memory_report(params)
-        print(f"pre-VMM freeze: {rep['da_matrices']} matrices"
-              + (f", LUT blow-up {rep['cell_blowup']:.0f}x"
-                 if rep["lut_cells"] else ""))
+        params = init_model(jax.random.key(0), cfg)
+        print(f"arch={cfg.name} params={count_params(cfg)/1e6:.1f}M "
+              f"quant={args.quant}")
+        mode = {"none": None, "int8": "int8", "da8": "da_bitplane",
+                "da8-lut": "da_lut", "da8-plan": "auto"}[args.quant]
+        eng = ServeEngine(cfg, params, batch_size=args.batch,
+                          max_len=args.max_len, da_mode=mode)
+        if mode is not None:
+            rep = da_memory_report(eng.params)
+            print(f"pre-VMM freeze: {rep['da_matrices']} matrices"
+                  + (f", LUT blow-up {rep['cell_blowup']:.0f}x"
+                     if rep["lut_cells"] else ""))
+        if args.save_artifact:
+            print(f"artifact -> {eng.save_artifact(args.save_artifact)}")
 
-    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=args.max_len)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for uid in range(args.requests):

@@ -42,6 +42,12 @@ LM_RULES: Mapping[str, AxisName] = {
     "kv_seq": ("model",),      # decode KV-cache sequence axis (seq-parallel KV)
     "lut_addr": None,
     "groups": None,
+    # DA-frozen weight artifacts (PackedWeights leaves wq/w_scale/luts):
+    # output columns shard over the model axis — each device holds the PMAs
+    # (codes + LUT slabs) for its slice of N, the tensor-parallel mapping.
+    # The contraction dim stays replicated: DA groups contract locally.
+    "da_in": None,
+    "da_out": ("model",),
 }
 
 # FSDP/ZeRO-3-style 2-D weight sharding: the "embed" logical axis (the
@@ -129,3 +135,52 @@ def named_sharding(logical_axes: Sequence[Optional[str]], shape) -> Optional[Nam
         return None
     mesh, _ = act
     return NamedSharding(mesh, pspec(logical_axes, shape))
+
+
+# ---------------------------------------------------------------------------
+# DA artifact sharding: tensor-parallel the PMAs across the mesh
+# ---------------------------------------------------------------------------
+
+def da_leaf_axes(name: str, ndim: int) -> Optional[Tuple[Optional[str], ...]]:
+    """Logical axes for a PackedWeights leaf by its stable pytree key name.
+
+    Leading dims (period stacks [P, ...], expert stacks [E, ...]) replicate;
+    the output-column dim maps to ``da_out`` (→ model axis) on every leaf so
+    codes, scales and LUT slabs of one column slice land on the same device.
+    Returns None for names that are not packed-artifact leaves.
+    """
+    if name == "wq" and ndim >= 2:
+        return (None,) * (ndim - 2) + ("da_in", "da_out")
+    if name == "w_scale" and ndim >= 2:
+        return (None,) * (ndim - 1) + ("da_out",)
+    if name == "luts" and ndim >= 3:
+        return (None,) * (ndim - 3) + ("groups", "lut_addr", "da_out")
+    return None
+
+
+def shard_frozen_params(params):
+    """device_put every DA-packed leaf of a frozen tree per the active mesh
+    rules (no-op without a mesh; non-packed leaves are left untouched).
+
+    This is the post-load "shard" stage of the artifact pipeline: a model
+    restored by ``load_artifact`` is host-resident and replicated; this
+    places its PMAs tensor-parallel across the mesh like any other param —
+    the divisibility fallback applies, so a column count that doesn't divide
+    the model axis replicates instead of erroring.
+    """
+    act = _active()
+    if act is None:
+        return params
+    from repro.core.engine import path_entry_name
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        axes = da_leaf_axes(path_entry_name(path[-1]),
+                            getattr(leaf, "ndim", 0))
+        if axes is not None:
+            ns = named_sharding(axes, leaf.shape)
+            if ns is not None:
+                leaf = jax.device_put(leaf, ns)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -6,11 +6,13 @@ decode_32k / long_500k dry-run cells lower. The engine adds continuous
 batching on top: a slot-based scheduler admits requests into free batch rows,
 decodes all active rows each step, and retires rows on EOS/max-len.
 
-DA quantization is wired through the unified execution engine
-(repro.core.engine): pass ``da_mode`` — ``"auto"`` or any registered backend
-name — and float params are frozen into PackedWeights artifacts whose every
-linear runs the multiplier-free datapath; prefill (large M) and decode (M =
-batch) then dispatch to different backends under the same verified surface.
+DA quantization is wired through the artifact pipeline (repro.core.freeze):
+pass ``da_mode`` — ``"auto"`` plans a backend/group-size/LUT decision per
+layer from measured + analytic costs; a registered backend name pins every
+layer — and float params are frozen into PackedWeights artifacts whose every
+linear runs the multiplier-free datapath.  ``ServeEngine.from_artifact``
+boots the same engine from a persisted artifact directory with zero float
+weights and zero re-packing; ``save_artifact`` writes one.
 """
 from __future__ import annotations
 
@@ -82,16 +84,26 @@ class ServeEngine:
         max_len: int,
         greedy: bool = True,
         da_mode: Optional[str] = None,
+        da_pin_modes: bool = True,
     ):
-        # da_mode: freeze float params through the unified DA engine ("auto"
-        # for shape-aware backend dispatch, or a registered backend name).
-        if da_mode is not None and da_mode != "float":
+        # da_mode: freeze float params through the DA artifact pipeline
+        # ("auto" plans a backend per layer from measured + analytic costs;
+        # a registered backend name pins every layer).  Params that already
+        # carry PackedWeights leaves (a loaded artifact) are never re-packed.
+        # da_pin_modes=False keeps runtime shape dispatch on the frozen
+        # artifact (prefill and decode may pick different backends) instead
+        # of baking in the decode-bucket plan.
+        self.artifact = None
+        if (da_mode is not None and da_mode != "float"
+                and not _is_frozen(params)):
             from repro.core.da import DAConfig
-            from repro.serve.quantize import freeze_model_da
+            from repro.core.freeze import freeze_model
 
-            params = freeze_model_da(
-                params, DAConfig(x_signed=True), mode=da_mode
+            self.artifact = freeze_model(
+                params, DAConfig(x_signed=True), mode=da_mode,
+                m_hint=batch_size, model_cfg=cfg, pin_modes=da_pin_modes,
             )
+            params = self.artifact.params
         # the engine always uses the sliced prefill head (strictly better)
         cfg = dataclasses.replace(cfg, prefill_last_only=True)
         self.cfg = cfg
@@ -107,6 +119,42 @@ class ServeEngine:
         self.cur_token = np.zeros(batch_size, dtype=np.int32)
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
+
+    # -- freeze-once, serve-many ---------------------------------------------
+    @classmethod
+    def from_artifact(
+        cls,
+        directory: str,
+        batch_size: int,
+        max_len: int,
+        greedy: bool = True,
+    ) -> "ServeEngine":
+        """Boot a serving engine from a persisted DA artifact: the packed
+        weights come straight off disk — no float params, no re-packing (the
+        paper's freeze-once premise, operationally)."""
+        from repro.core.freeze import load_artifact
+
+        art = load_artifact(directory)
+        if art.model_cfg is None:
+            raise ValueError(
+                f"artifact {directory} carries no model config; freeze with "
+                "freeze_model(..., model_cfg=cfg) to make it servable"
+            )
+        eng = cls(art.model_cfg, art.params, batch_size, max_len,
+                  greedy=greedy)
+        eng.artifact = art
+        return eng
+
+    def save_artifact(self, directory: str) -> str:
+        """Persist this engine's frozen weights + plan for later cold boots."""
+        from repro.core.freeze import save_artifact
+
+        if self.artifact is None:
+            raise ValueError(
+                "engine holds no DAArtifact (constructed without da_mode and "
+                "not from_artifact) — nothing to save"
+            )
+        return save_artifact(directory, self.artifact)
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -169,6 +217,18 @@ class ServeEngine:
             if not self.step() and not self.queue:
                 break
         return self.done
+
+
+def _is_frozen(params: Any) -> bool:
+    """Does the tree already carry PackedWeights leaves (a DA artifact)?"""
+    from repro.core.engine import PackedWeights
+
+    return any(
+        isinstance(leaf, PackedWeights)
+        for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedWeights)
+        )
+    )
 
 
 def _scatter_slot(caches: Any, caches1: Any, slot: int) -> Any:

@@ -1,82 +1,26 @@
-"""Freeze a trained model into DA serving form (the paper's pre-VMM step,
-applied model-wide).
+"""Compat shim: model-level DA freezing moved to :mod:`repro.core.freeze`.
 
-Every weight-matrix leaf becomes a :class:`~repro.core.engine.PackedWeights`
-artifact: int8 codes + per-column scale (+ materialized weight-sum LUTs below
-``lut_cell_limit`` — the paper's PMA contents), built once and shared by every
-engine backend.  ``mode`` is any registered engine backend (legacy ``da_*``
-spellings are accepted) or ``"auto"`` — then the engine's shape-aware dispatch
-picks the backend per layer shape at run time, which is exactly the DAISM-
-style "choose the in-memory multiply strategy per layer" policy.  Routers,
-norms, biases, embeddings and scalar SSM params stay float: they are not VMMs
-(gather / elementwise), noted in DESIGN.md.
+The old surface — ``freeze_model_da(params, cfg, mode=...)`` threading one
+execution mode through every layer — is preserved for existing call sites,
+but it now delegates to the artifact pipeline's planner: under
+``mode="auto"`` each layer gets its own (backend, group size, lut-or-not)
+plan from measured autotune timings with the analytic hardware model as the
+cache-less fallback.  New code should use :func:`repro.core.freeze.freeze_model`
+directly — it returns the full :class:`~repro.core.freeze.DAArtifact`
+(plan included) which :func:`repro.core.freeze.save_artifact` persists for
+serve-from-disk boots.
 """
 from __future__ import annotations
 
-from typing import Any
-
-import jax
-
-from repro.core.da import DAConfig
-from repro.core.engine import PackedWeights
-from repro.core.linear import freeze_da
-
-# Param leaf names that are weight matrices (x @ W shaped [in, out] or
-# batched expert weights [E, in, out]).
-DA_LEAF_NAMES = {
-    "wq", "wk", "wv", "wo",          # attention projections
-    "w_up", "w_gate", "w_down",      # MLP / MoE experts / shared experts
-    "in_proj", "out_proj",           # mamba projections
-    "w",                             # lm head
-}
-SKIP_CONTEXT = {"router", "conv_w", "table"}
-
-
-def freeze_model_da(
-    params: Any,
-    da_cfg: DAConfig = DAConfig(x_signed=True),
-    mode: str = "auto",
-    lut_cell_limit: int = 1 << 24,
-) -> Any:
-    """Walk the param tree; replace weight leaves with packed DA artifacts.
-
-    ``lut_cell_limit`` bounds the LUT blow-up in **cells** per matrix (see
-    ``engine.pack_weights``)."""
-
-    def walk(path, leaf):
-        names = [_entry_name(p) for p in path]
-        last = names[-1] if names else ""
-        if last in DA_LEAF_NAMES and last not in SKIP_CONTEXT and leaf.ndim >= 2:
-            return freeze_da(leaf, da_cfg, mode=mode, lut_cell_limit=lut_cell_limit)
-        return leaf
-
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    return jax.tree_util.tree_unflatten(
-        treedef, [walk(path, leaf) for path, leaf in flat]
-    )
-
-
-def _entry_name(entry) -> str:
-    for attr in ("key", "name", "idx"):
-        if hasattr(entry, attr):
-            return str(getattr(entry, attr))
-    return str(entry)
-
-
-def da_memory_report(frozen_params: Any) -> dict:
-    """The paper's Table-I trade-off at model scale: LUT cells vs weights."""
-    weights = luts = mats = 0
-    for leaf in jax.tree.leaves(
-        frozen_params, is_leaf=lambda x: isinstance(x, PackedWeights)
-    ):
-        if isinstance(leaf, PackedWeights):
-            mats += 1
-            weights += leaf.wq.size
-            if leaf.luts is not None:
-                luts += leaf.luts.size
-    return {
-        "da_matrices": mats,
-        "weight_cells": weights,
-        "lut_cells": luts,
-        "cell_blowup": (luts / weights) if weights else 0.0,
-    }
+from repro.core.freeze import (  # noqa: F401
+    DA_LEAF_NAMES,
+    SKIP_CONTEXT,
+    DAArtifact,
+    LayerPlan,
+    da_memory_report,
+    freeze_model,
+    freeze_model_da,
+    load_artifact,
+    plan_model,
+    save_artifact,
+)

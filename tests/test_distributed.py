@@ -193,6 +193,49 @@ def test_da_serving_under_sharding():
     assert "OK" in out
 
 
+def test_frozen_artifact_shards_pmas_over_model_axis():
+    """The artifact pipeline's shard stage: a DA-frozen model's packed
+    leaves (wq / w_scale / luts) tensor-parallel over the mesh's model axis
+    — codes, scales and LUT slabs of one column slice co-located — and the
+    sharded serving forward matches the unsharded one (integer DA path is
+    exact; float epilogues differ only by reduction-order noise)."""
+    out = run_with_devices("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import ARCHS, reduce_for_smoke
+        from repro.core.da import DAConfig
+        from repro.core.freeze import freeze_model
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.sharding import shard_frozen_params, use_mesh_rules
+        from repro.models.model import forward, init_model
+
+        cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
+                                  moe_dropless=True)
+        params = init_model(jax.random.key(0), cfg)
+        art = freeze_model(params, DAConfig(x_signed=True), mode="lut")
+        toks = jax.random.randint(jax.random.key(1), (4, 8), 0, cfg.vocab)
+        ref, _ = forward(art.params, toks, cfg)
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        with use_mesh_rules(mesh):
+            sharded = shard_frozen_params(art.params)
+            # attention out-projection: [P, K, N] codes split N 4-ways,
+            # with the scale and the LUT slab split the same way
+            pw = sharded["periods"]["pos_0"]["mixer"]["wq"]
+            for leaf, want_axis in ((pw.wq, -1), (pw.w_scale, -1),
+                                    (pw.luts, -1)):
+                spec = leaf.sharding.spec
+                assert spec and spec[-1] == "model", (leaf.shape, spec)
+                assert leaf.addressable_shards[0].data.shape[want_axis] \\
+                    == leaf.shape[want_axis] // 4
+            got, _ = jax.jit(lambda p, t: forward(p, t, cfg))(sharded, toks)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                                   atol=1e-4, rtol=1e-4)
+        assert bool(jnp.all(jnp.argmax(ref, -1) == jnp.argmax(got, -1)))
+        print("OK", pw.wq.sharding.spec)
+    """)
+    assert "OK" in out
+
+
 def test_fsdp_rules_shard_params_2d():
     """FSDP/ZeRO-style 2-D sharding: weights shard over data AND model axes;
     per-device parameter bytes shrink by the full mesh size."""

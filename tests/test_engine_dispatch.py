@@ -176,6 +176,52 @@ def test_explicit_path_load_is_read_only(tmp_path):
     assert load_cost_table() == installed  # process table untouched
 
 
+def test_cost_table_registry_fingerprint_mismatch_warns(tmp_path):
+    """A cache tuned against a different backend registry (renamed/added/
+    removed backends) is ignored with a warning — the heuristic fallback
+    serves dispatch instead of stale rankings or a KeyError."""
+    import jax
+
+    from repro.core.engine import registry_fingerprint
+
+    cfg = DAConfig(x_signed=True)
+    bucket = shape_bucket(4, 64, 128, cfg.x_bits)
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({
+        "version": 1, "device": jax.default_backend(),
+        "registry": "00000000", "table": {bucket: {"lut": 1.0}},
+    }))
+    with pytest.warns(UserWarning, match="different backend registry"):
+        assert load_cost_table(stale) == {}
+    # a matching fingerprint loads normally; absence of a stamp is accepted
+    # (pre-fingerprint caches keep working)
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps({
+        "version": 1, "device": jax.default_backend(),
+        "registry": registry_fingerprint(), "table": {bucket: {"lut": 1.0}},
+    }))
+    assert load_cost_table(fresh) == {bucket: {"lut": 1.0}}
+
+
+def test_cost_table_unknown_backend_names_warn(tmp_path):
+    """Unknown backend names in a cache are dropped with a warning, and
+    dispatch still resolves (heuristic covers untimed shapes)."""
+    import jax
+
+    cfg = DAConfig(x_signed=True)
+    bucket = shape_bucket(4, 64, 128, cfg.x_bits)
+    p = tmp_path / "renamed.json"
+    p.write_text(json.dumps({
+        "version": 1, "device": jax.default_backend(),
+        "table": {bucket: {"warp_drive": 0.1, "lut": 2.0}},
+    }))
+    with pytest.warns(UserWarning, match="unregistered backends"):
+        table = load_cost_table(p)
+    assert table[bucket] == {"lut": 2.0}
+    set_cost_table(table)
+    assert select_backend(4, 64, 128, cfg, has_luts=True) == "lut"
+
+
 def test_cost_table_rejects_other_device(tmp_path):
     """A cache tuned on different hardware must not steer dispatch (a
     TPU-tuned table would send CPU through interpret-mode Pallas)."""
