@@ -1,0 +1,215 @@
+"""Serving-runtime throughput: decode tokens/s and per-token latency through
+the DA engine (``mode="auto"``), plus the paged-vs-slot comparison at equal
+KV memory.
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py           # full
+    PYTHONPATH=src python benchmarks/serve_throughput.py --quick   # CI-sized
+
+Writes ``artifacts/BENCH_serve_decode.json`` (override with ``--out``):
+
+* ``decode``    — tokens/s and p50/p99 inter-token latency for the paged
+  runtime at batch 1 / 8 / 32, uniform prompts (pure decode hot loop).
+* ``mixed_16``  — a mixed workload of 16 staggered requests with varied
+  prompt/output lengths, served by the slot runtime (its dense cache sets
+  the memory budget) and by the paged runtime given the SAME number of KV
+  token-rows as a page pool but 4× the lanes. ``speedup`` is the paged
+  decode-throughput multiple; the acceptance bar is ≥ 2×.
+
+Both engines are warmed (jit caches populated on a prelude workload) before
+the measured window, so the numbers are steady-state serving throughput,
+not compile time.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.core.da import DAConfig
+from repro.core.freeze import freeze_model
+from repro.models.model import init_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvcache import pages_for
+
+
+def build_cfg():
+    # one small serving model for quick and full runs: this benchmark
+    # instruments the RUNTIME (scheduling, paging, batching overheads), so
+    # the model is sized to keep per-step dispatch+datapath in the regime
+    # where runtime efficiency is visible, not buried under BLAS time;
+    # quick/full differ in workload volume only
+    return dataclasses.replace(
+        ARCHS["qwen3-8b"],
+        name="qwen3-serve-bench",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab=4000,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+        moe_dropless=True,
+    )
+
+
+def _warm(eng, cfg, rng):
+    """Compile every step-shape bucket, then exercise the host loop once —
+    the measured window is steady-state serving, not XLA compile time."""
+    eng.warmup()
+    for w in range(2):
+        eng.submit(Request(uid=10_000 + w,
+                           prompt=rng.integers(0, cfg.vocab, 6),
+                           max_new_tokens=2))
+    eng.run()
+
+
+def _measure(eng, cfg, requests):
+    uids = [r.uid for r in requests]
+    t0 = time.perf_counter()
+    for r in requests:
+        eng.submit(r)
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(done[u].generated) for u in uids)
+    itl = []
+    for u in uids:
+        ts = done[u].token_times
+        itl.extend(b - a for a, b in zip(ts, ts[1:]))
+
+    def pct(q):
+        return float(np.percentile(itl, q)) * 1e3 if itl else 0.0
+
+    return {
+        "requests": len(uids),
+        "out_tokens": toks,
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(toks / wall, 2),
+        "itl_p50_ms": round(pct(50), 3),
+        "itl_p99_ms": round(pct(99), 3),
+    }
+
+
+def bench_decode(frozen, cfg, batch, max_new, max_len):
+    eng = ServeEngine(cfg, frozen, batch_size=batch, max_len=max_len,
+                      runtime="paged")
+    rng = np.random.default_rng(0)
+    _warm(eng, cfg, rng)
+    reqs = [Request(uid=u, prompt=rng.integers(0, cfg.vocab, 8),
+                    max_new_tokens=max_new) for u in range(batch)]
+    return _measure(eng, cfg, reqs)
+
+
+def bench_mixed(frozen, cfg, repeats: int):
+    """16 staggered requests, varied prompt/output lengths, both runtimes at
+    equal KV memory.
+
+    The production-shaped scenario: ``max_len`` is provisioned for the
+    worst-case request, most requests are far shorter. The dense slot cache
+    must reserve ``max_len`` rows per lane no matter what — at this memory
+    budget that is 2 lanes. The paged pool holds exactly the same KV
+    token-rows, but 16 lanes share it page-by-page, so short requests only
+    occupy what they actually use and ~8× more requests decode
+    concurrently. Engines are measured in interleaved repeats (CPU wall
+    clocks are noisy); the best run of each is compared."""
+    # geometry note: total page demand (16 × pages(prompt+max_new)) is kept
+    # at ≈ pool capacity — overcommitting a pool this small just converts
+    # throughput into preemption replays for both admission policies
+    slot_batch, page_size, max_len = 2, 8, 192
+    plo, phi, olo, ohi = (4, 12, 12, 20)
+    rng = np.random.default_rng(1)
+
+    def workload(base_uid):
+        r = np.random.default_rng(2)
+        return [Request(uid=base_uid + u,
+                        prompt=r.integers(0, cfg.vocab,
+                                          int(r.integers(plo, phi))),
+                        max_new_tokens=int(r.integers(olo, ohi)))
+                for u in range(16)]
+
+    eng_s = ServeEngine(cfg, frozen, batch_size=slot_batch, max_len=max_len,
+                        runtime="slots")
+    _warm(eng_s, cfg, rng)
+    n_pages = slot_batch * pages_for(max_len, page_size) + 1
+    eng_p = ServeEngine(cfg, frozen, batch_size=16, max_len=max_len,
+                        runtime="paged", page_size=page_size, n_pages=n_pages,
+                        admission="optimistic", prefill_lanes=8,
+                        prefill_chunk=4)
+    _warm(eng_p, cfg, rng)
+
+    runs = {"slots": [], "paged": []}
+    for rep in range(repeats):
+        runs["slots"].append(_measure(eng_s, cfg, workload(1000 * (rep + 1))))
+        pe0 = eng_p.metrics()["preemptions"]
+        m = _measure(eng_p, cfg, workload(1000 * (rep + 1)))
+        m["preemptions"] = eng_p.metrics()["preemptions"] - pe0
+        runs["paged"].append(m)
+
+    out = {
+        "slots": max(runs["slots"], key=lambda m: m["tokens_per_s"]),
+        "paged": max(runs["paged"], key=lambda m: m["tokens_per_s"]),
+        "slots_runs": [m["tokens_per_s"] for m in runs["slots"]],
+        "paged_runs": [m["tokens_per_s"] for m in runs["paged"]],
+    }
+    out["kv_token_rows"] = slot_batch * max_len
+    out["speedup"] = round(
+        out["paged"]["tokens_per_s"] / out["slots"]["tokens_per_s"], 2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="interleaved measurement repeats (default 3; 2 quick)")
+    ap.add_argument("--out", default="artifacts/BENCH_serve_decode.json")
+    args = ap.parse_args()
+    repeats = args.repeats or (2 if args.quick else 3)
+
+    cfg = build_cfg()
+    params = init_model(jax.random.key(0), cfg)
+    # pin_modes=False keeps shape-aware dispatch live on the frozen artifact:
+    # each serving shape (decode [B,1], chunked prefill [Bp,chunk]) picks its
+    # own backend instead of inheriting the m_hint decode-bucket plan
+    art = freeze_model(params, DAConfig(x_signed=True), mode="auto",
+                       m_hint=8, model_cfg=cfg, pin_modes=False)
+    del params
+
+    max_new = 8 if args.quick else 32
+    decode = {}
+    for batch in (1, 8, 32):
+        decode[f"b{batch}"] = bench_decode(art.params, cfg, batch, max_new,
+                                           max_len=64)
+        print(f"decode b={batch:<3d} {decode[f'b{batch}']}")
+
+    mixed = bench_mixed(art.params, cfg, repeats)
+    print(f"mixed slots  {mixed['slots']}  runs={mixed['slots_runs']}")
+    print(f"mixed paged  {mixed['paged']}  runs={mixed['paged_runs']}")
+    print(f"speedup (equal KV memory, 16 staggered requests): "
+          f"{mixed['speedup']}x")
+
+    result = {
+        "bench": "serve_decode",
+        "device": jax.default_backend(),
+        "model": cfg.name,
+        "da_mode": "auto",
+        "quick": args.quick,
+        "decode": decode,
+        "mixed_16": mixed,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -73,6 +73,12 @@ def main():
                          "weights, no re-packing)")
     ap.add_argument("--save-artifact", default=None, metavar="DIR",
                     help="after freezing, persist the artifact to DIR")
+    ap.add_argument("--runtime", default="auto",
+                    choices=["auto", "paged", "slots"],
+                    help="serving runtime (auto: paged KV + continuous "
+                         "batching for attention stacks)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size (tokens) for the paged runtime")
     args = ap.parse_args()
     if args.save_artifact and args.mode == "float":
         raise SystemExit("--save-artifact requires a DA --mode (not float)")
@@ -83,10 +89,12 @@ def main():
     t0 = time.perf_counter()
     if args.artifact:
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
-                                        max_len=96)
+                                        max_len=96, runtime=args.runtime,
+                                        page_size=args.page_size)
         cfg = eng.cfg
         print(f"cold boot from {args.artifact} in "
-              f"{time.perf_counter()-t0:.1f}s (zero float weights)")
+              f"{time.perf_counter()-t0:.1f}s (zero float weights, "
+              f"runtime={eng.runtime})")
         print_plan(eng)
     else:
         cfg = build_cfg()
@@ -94,7 +102,8 @@ def main():
         print(f"model: {count_params(cfg)/1e6:.1f}M params")
         t0 = time.perf_counter()
         eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=96,
-                          da_mode=args.mode)  # per-layer planned freeze
+                          da_mode=args.mode,  # per-layer planned freeze
+                          runtime=args.runtime, page_size=args.page_size)
         if args.mode != "float":
             print(f"pre-VMM freeze ({args.mode}) in "
                   f"{time.perf_counter()-t0:.1f}s:")
@@ -116,7 +125,7 @@ def main():
     total_toks = sum(len(r.generated) for r in done.values())
     print(f"\nserved {len(done)} requests / {total_toks} tokens in {dt:.1f}s "
           f"({total_toks/dt:.1f} tok/s on CPU, continuous batching, "
-          f"batch={args.batch})")
+          f"runtime={eng.runtime}, batch={args.batch})")
     for uid in sorted(done)[:4]:
         print(f"  req {uid}: {len(done[uid].generated)} tokens -> "
               f"{done[uid].generated[:8]}...")

@@ -25,6 +25,12 @@ def main():
                     help="boot from a persisted DA artifact (cold serve path)")
     ap.add_argument("--save-artifact", default=None, metavar="DIR",
                     help="persist the frozen artifact after the pre-VMM step")
+    ap.add_argument("--runtime", default="auto",
+                    choices=["auto", "paged", "slots"],
+                    help="serving runtime (auto: paged KV + continuous "
+                         "batching for attention stacks)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size (tokens) for the paged runtime")
     args = ap.parse_args()
     if args.artifact and (args.save_artifact or args.quant != "none"
                           or args.smoke or args.arch):
@@ -45,10 +51,12 @@ def main():
 
     if args.artifact:
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
-                                        max_len=args.max_len)
+                                        max_len=args.max_len,
+                                        runtime=args.runtime,
+                                        page_size=args.page_size)
         cfg = eng.cfg
         print(f"arch={cfg.name} cold boot from {args.artifact} "
-              "(zero float weights)")
+              f"(zero float weights, runtime={eng.runtime})")
     else:
         if args.arch is None:
             raise SystemExit("--arch is required unless booting --artifact")
@@ -66,7 +74,8 @@ def main():
         mode = {"none": None, "int8": "int8", "da8": "da_bitplane",
                 "da8-lut": "da_lut", "da8-plan": "auto"}[args.quant]
         eng = ServeEngine(cfg, params, batch_size=args.batch,
-                          max_len=args.max_len, da_mode=mode)
+                          max_len=args.max_len, da_mode=mode,
+                          runtime=args.runtime, page_size=args.page_size)
         if mode is not None:
             rep = da_memory_report(eng.params)
             print(f"pre-VMM freeze: {rep['da_matrices']} matrices"

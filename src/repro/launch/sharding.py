@@ -40,6 +40,13 @@ LM_RULES: Mapping[str, AxisName] = {
     "ssm_heads": ("model",),
     "state": None,
     "kv_seq": ("model",),      # decode KV-cache sequence axis (seq-parallel KV)
+    # Paged KV pools ([pages, page_slot, kv_heads, head_dim]): like the dense
+    # cache, the kv-heads axis is the tensor-parallel one (same mesh rules as
+    # the packed DA params the attention weights shard by), pages replicate —
+    # every device holds its head-slice of every page, so host page tables
+    # stay device-agnostic integers.
+    "page": None,
+    "page_slot": None,
     "lut_addr": None,
     "groups": None,
     # DA-frozen weight artifacts (PackedWeights leaves wq/w_scale/luts):
@@ -156,6 +163,31 @@ def da_leaf_axes(name: str, ndim: int) -> Optional[Tuple[Optional[str], ...]]:
     if name == "luts" and ndim >= 3:
         return (None,) * (ndim - 3) + ("groups", "lut_addr", "da_out")
     return None
+
+
+def paged_cache_axes(ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for a PagedKVCache pool leaf: [..., pages, page_slot,
+    kv_heads, head_dim] with leading period-stack dims replicated."""
+    if ndim < 4:
+        raise ValueError(f"paged pool leaves are >=4-D, got ndim={ndim}")
+    return (None,) * (ndim - 4) + ("page", "page_slot", "kv_heads", "head_dim")
+
+
+def shard_paged_caches(caches):
+    """device_put every paged-pool leaf per the active mesh rules (no-op
+    without a mesh) — the serving runtime's analogue of shard_frozen_params:
+    the kv-heads slice of every page lands on the device holding the same
+    head-slice of the packed attention PMAs, so gather-based reads stay
+    local. Divisibility fallback applies (odd kv-head counts replicate)."""
+    act = _active()
+    if act is None:
+        return caches
+
+    def one(leaf):
+        ns = named_sharding(paged_cache_axes(leaf.ndim), leaf.shape)
+        return jax.device_put(leaf, ns) if ns is not None else leaf
+
+    return jax.tree.map(one, caches)
 
 
 def shard_frozen_params(params):

@@ -1,4 +1,5 @@
-"""GQA attention with RoPE/M-RoPE, qk-norm, KV cache, flash-style chunking."""
+"""GQA attention with RoPE/M-RoPE, qk-norm, KV caches (dense-slot KVCache or
+page-table-indexed PagedKVCache), flash-style chunking."""
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
@@ -29,6 +30,29 @@ class KVCache(NamedTuple):
             v=jnp.zeros(shape, dtype=dtype),
             length=jnp.zeros((), dtype=jnp.int32),
         )
+
+
+class PagedKVCache(NamedTuple):
+    """Paged decode cache for one attention layer (or a period stack).
+
+    k/v: ``[n_pages, page_size, n_kv, hd]`` — batch-free; rows of a request
+    live on the physical pages its page table names. The host-side pool
+    allocator / page tables / defrag live in ``repro.serve.kvcache``; this
+    container sits beside :class:`KVCache` because attention indexes it.
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+    @staticmethod
+    def zeros(cfg: ModelConfig, n_pages: int, page_size: int, dtype):
+        shape = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim_)
+        return PagedKVCache(k=jnp.zeros(shape, dtype=dtype),
+                            v=jnp.zeros(shape, dtype=dtype))
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[-3]
 
 
 def init_attention(key, cfg: ModelConfig):
@@ -212,6 +236,40 @@ def _chunked_attention(q, k, v, q_offset: int, chunk: int, unroll: bool = False)
     return out.transpose(0, 2, 1, 3)  # [B,T,H,hd]
 
 
+def _paged_attention(q, k, v, cache: PagedKVCache, page_table, tpos,
+                     cfg: ModelConfig):
+    """Page-table-indexed cache write + gather-based attention read.
+
+    Writes each token's K/V row at ``(page_table[b, pos // ps], pos % ps)``
+    in the batch-free pool, then gathers the row's table back into a
+    contiguous ``[B, S, kv, hd]`` view and runs the masked decode attention
+    over it. One code path serves decode (T=1), chunked prefill (T=chunk,
+    earlier chunks visible through the gather) and any coalesced mix —
+    pad lanes carry positions inside the garbage column, whose logical
+    positions exceed every real ``tpos``, so ``kpos <= tpos`` masks them out
+    of real rows exactly as it masks unwritten cache beyond a row's length.
+    """
+    b, t = tpos.shape
+    ps = cache.page_size
+    b_idx = jnp.arange(b)[:, None]
+    page_ids = page_table[b_idx, tpos // ps]          # [B, T] physical pages
+    off = tpos % ps
+    ck = cache.k.at[page_ids, off].set(k.astype(cache.k.dtype))
+    cv = cache.v.at[page_ids, off].set(v.astype(cache.v.dtype))
+    ck = constrain(ck, ("page", "page_slot", "kv_heads", "head_dim"))
+    cv = constrain(cv, ("page", "page_slot", "kv_heads", "head_dim"))
+    new_cache = PagedKVCache(k=ck, v=cv)
+    # gather-based read: [B, W, ps, kv, hd] → contiguous [B, W·ps, kv, hd]
+    kg = ck[page_table].reshape(b, -1, ck.shape[-2], ck.shape[-1])
+    vg = cv[page_table].reshape(b, -1, cv.shape[-2], cv.shape[-1])
+    kg = constrain(kg, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    vg = constrain(vg, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    kpos = jnp.arange(kg.shape[1])
+    mask = kpos[None, None, :] <= tpos[:, :, None]    # [B, T, S] causal+length
+    y = _decode_attention(q, kg, vg, mask, cfg)
+    return y, new_cache
+
+
 def attention_forward(
     p,
     x,
@@ -220,12 +278,20 @@ def attention_forward(
     cache: Optional[KVCache] = None,
     update_cache: bool = False,
     attn_bias: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None,
 ):
     """Train fwd (cache=None), prefill (update_cache), or decode (T small,
     cache holds the past). Returns (y, new_cache)."""
     b, t, _ = x.shape
     q, k, v = _project_qkv(p, x, cfg, positions)
     new_cache = None
+    if isinstance(cache, PagedKVCache):
+        if page_table is None:
+            raise ValueError("a PagedKVCache requires a page_table operand")
+        tpos = positions[..., 0] if positions.ndim == 3 else positions  # [B,T]
+        y, new_cache = _paged_attention(q, k, v, cache, page_table, tpos, cfg)
+        y = dense(y.reshape(b, t, cfg.q_dim), p["wo"])
+        return constrain(y, ("batch", "seq", "embed")), new_cache
     if cache is not None:
         # Position-driven cache writes: each batch row writes its own segment
         # (continuous batching → ragged per-slot lengths). positions[..., 0]

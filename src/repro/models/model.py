@@ -55,14 +55,14 @@ def init_block(key, cfg: ModelConfig, pos: int) -> Params:
 
 
 def block_forward(p, x, cfg: ModelConfig, pos: int, positions, cache,
-                  update_cache, attn_bias=None):
+                  update_cache, attn_bias=None, page_table=None):
     mixer = cfg.mixer_kind(pos)
     ffn = cfg.ffn_kind(pos)
     h = apply_norm(p["norm_mixer"], x, cfg)
     if mixer == "attn":
         y, new_cache = attention_forward(
             p["mixer"], h, cfg, positions, cache, update_cache,
-            attn_bias=attn_bias,
+            attn_bias=attn_bias, page_table=page_table,
         )
     else:
         y, new_cache = mamba_forward(p["mixer"], h, cfg, cache, update_cache)
@@ -122,11 +122,22 @@ def forward(
     caches: Optional[Params] = None,
     update_cache: bool = False,
     last_logit_only: bool = False,
+    page_table: Optional[jax.Array] = None,
+    last_idx: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """inputs: tokens [B, T] int32, or embeddings [B, T, D] (modality stubs).
 
     last_logit_only: slice the final hidden state BEFORE the LM head —
     prefill needs one position's logits, not T×V (§Perf lever L2).
+
+    page_table: int32 [B, W] physical-page ids when ``caches`` hold
+    PagedKVCache pools (the serving runtime's paged layout); loop-invariant
+    across the layer scan, like the hoisted causal bias.
+
+    last_idx: int32 [B] — per-row index of the last *real* token; the hidden
+    state is gathered there before the LM head (the ragged-batch
+    generalization of ``last_logit_only``, used by length-bucketed prefill
+    and coalesced prefill+decode steps). Returns logits [B, 1, vocab].
 
     Returns (logits [B, T, vocab] or [B, 1, vocab], new_caches)."""
     if inputs.ndim == 2:
@@ -155,7 +166,7 @@ def forward(
             cache = period_caches[key] if have_cache else None
             h, nc = block_forward(
                 period_params[key], h, cfg, pos, positions, cache,
-                update_cache, attn_bias=attn_bias,
+                update_cache, attn_bias=attn_bias, page_table=page_table,
             )
             new_caches[key] = nc if nc is not None else 0
         return h, new_caches
@@ -181,7 +192,9 @@ def forward(
         scan_body, h, xs, unroll=cfg.n_periods if cfg.scan_unroll else 1
     )
 
-    if last_logit_only:
+    if last_idx is not None:
+        h = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)  # [B,1,D]
+    elif last_logit_only:
         h = h[:, -1:]
     h = apply_norm(params["final_norm"], h, cfg)
     logits = apply_lm_head(params["lm_head"], h)

@@ -1,10 +1,19 @@
-"""Serving engine: batched prefill/decode with KV caches and DA-quantized
-weights (the paper's inference setting — weights constant, the DA precondition).
+"""Serving engine: continuous batching with KV caches and DA-quantized
+weights (the paper's inference setting — weights constant, the DA
+precondition).
 
-``serve_step`` (single-token decode over the whole batch) is what the
-decode_32k / long_500k dry-run cells lower. The engine adds continuous
-batching on top: a slot-based scheduler admits requests into free batch rows,
-decodes all active rows each step, and retires rows on EOS/max-len.
+``ServeEngine`` is a thin facade over two runtimes:
+
+* ``runtime="paged"`` (default for attention stacks) — the continuous-
+  batching scheduler in ``repro.serve.scheduler``: paged KV cache, admission
+  queue with token-budget policy, chunked prefill coalesced into the decode
+  batch, preemption, streaming callbacks and latency metrics.
+* ``runtime="slots"`` — the legacy fixed-slot runtime kept for architectures
+  whose mixers hold O(1) state (Mamba/hybrid stacks gain nothing from KV
+  paging) and as the benchmark baseline. Its per-slot prefill pads prompts
+  to power-of-two length buckets (O(log max_len) compilations instead of one
+  per prompt length) and scatters the fresh KV into the batch tree inside
+  the same jitted call.
 
 DA quantization is wired through the artifact pipeline (repro.core.freeze):
 pass ``da_mode`` — ``"auto"`` plans a backend/group-size/LUT decision per
@@ -17,7 +26,7 @@ weights and zero re-packing; ``save_artifact`` writes one.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -26,19 +35,13 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import forward, init_caches
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # [T0] int32
-    max_new_tokens: int = 32
-    eos_id: int = -1              # -1 → never stops early
-    generated: Optional[List[int]] = None
-
-    def __post_init__(self):
-        if self.generated is None:
-            self.generated = []
+from repro.serve.scheduler import (  # noqa: F401  (Request re-exported)
+    PagedScheduler,
+    Request,
+    latency_metrics,
+    mk_positions,
+    pow2_bucket,
+)
 
 
 def make_prefill_step(cfg: ModelConfig):
@@ -67,14 +70,197 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
-def _mk_positions(cfg: ModelConfig, pos: jax.Array) -> jax.Array:
-    if cfg.mrope_sections:
-        return jnp.stack([pos, pos, pos], axis=-1)
-    return pos
+def scatter_cache_row(caches, c1, slot):
+    """Copy batch row 0 of the batch-1 cache tree ``c1`` into row ``slot``
+    (python int or traced scalar) of the batch tree. Cache layouts: KVCache
+    k/v [P, B, S, kv, hd]; MambaCache conv [P, B, C-1, ch], ssm [P, B, H,
+    Pd, S]; stacked scalar KVCache.length [P] takes the elementwise max
+    (per-slot lengths are tracked host-side and masked via positions)."""
+
+    def one(big, small):
+        if big.ndim == 1:
+            return jnp.maximum(big, small)
+        return jax.lax.dynamic_update_slice(
+            big, small.astype(big.dtype), (0, slot) + (0,) * (big.ndim - 2)
+        )
+
+    return jax.tree.map(one, caches, c1)
+
+
+def make_prefill_into_slot(cfg: ModelConfig, max_len: int):
+    """Slot prefill, one compilation per length bucket: (params, caches,
+    tokens [1,T_bucket], positions, last_idx [1], slot) → (logits [1,V],
+    caches). The batch-1 prefill caches are zeros created inside the trace
+    and the fresh KV is scattered into row ``slot`` of the batch tree with
+    one dynamic_update_slice per leaf — no host-side batch-1 cache init, no
+    O(tree) host round-trip, and ``slot`` is a traced operand so every slot
+    shares the compilation."""
+
+    def prefill(params, caches, tokens, positions, last_idx, slot):
+        c1 = init_caches(cfg, 1, max_len, cfg.dtype())
+        logits, c1 = forward(params, tokens, cfg, positions=positions,
+                             caches=c1, update_cache=True, last_idx=last_idx)
+        return logits[:, 0], scatter_cache_row(caches, c1, slot)
+
+    return prefill
+
+
+class _SlotRuntime:
+    """Fixed-slot continuous batching over a dense [B, max_len] cache."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, batch_size: int,
+                 max_len: int, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_size
+        self.max_len = max_len
+        self.greedy = greedy
+        self.caches = init_caches(cfg, batch_size, max_len, cfg.dtype())
+        # prompt padding is only sound for attention mixers (pad KV rows stay
+        # masked until decode overwrites them); the Mamba/SSD recurrence has
+        # no position mask, so pad tokens would corrupt the carried conv/ssm
+        # state — those archs prefill at exact prompt length
+        self._bucketed = all(cfg.mixer_kind(p) == "attn"
+                             for p in range(cfg.period))
+        self.prefill_compiles = 0
+        base = make_prefill_into_slot(cfg, max_len)
+
+        def counted(*a):
+            self.prefill_compiles += 1  # trace-time side effect = 1 / bucket
+            return base(*a)
+
+        self._prefill_into = jax.jit(counted)
+        self._decode = jax.jit(make_serve_step(cfg))
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.slot_len = np.zeros(batch_size, dtype=np.int64)
+        self.cur_token = np.zeros(batch_size, dtype=np.int32)
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt of {len(req.prompt)} tokens does "
+                f"not fit max_len={self.max_len}"
+            )
+        req.submit_t = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.b):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_slot(i, req)
+
+    def _prefill_slot(self, i: int, req: Request) -> None:
+        """Bucketed per-slot prefill straight into slot ``i``.
+
+        For attention stacks the prompt is padded to the next power-of-two
+        length (capped at max_len); pad tokens write cache rows past the
+        real length, which stay masked (`kpos <= tpos`) until decode
+        overwrites them — so 10 distinct prompt lengths cost O(log)
+        compilations, not 10. Mamba/hybrid stacks use the exact length."""
+        cfg = self.cfg
+        t0 = len(req.prompt)
+        bucket = min(pow2_bucket(t0, lo=4), self.max_len) if self._bucketed \
+            else t0
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :t0] = req.prompt
+        pos = mk_positions(cfg, jnp.arange(bucket, dtype=jnp.int32)[None])
+        logits, self.caches = self._prefill_into(
+            self.params, self.caches, jnp.asarray(toks), pos,
+            jnp.asarray([t0 - 1], dtype=jnp.int32),
+            jnp.asarray(i, dtype=jnp.int32),
+        )
+        tok = int(jnp.argmax(logits[0])) if self.greedy else int(
+            jax.random.categorical(jax.random.key(req.uid), logits[0])
+        )
+        now = time.perf_counter()
+        req.first_token_t = now
+        req.token_times.append(now)
+        req.generated.append(tok)
+        if req.on_token is not None:
+            req.on_token(req.uid, tok)
+        self.slots[i] = req
+        self.slot_len[i] = t0 + 1
+        self.cur_token[i] = tok
+
+    # -- decode --------------------------------------------------------------
+    def step(self) -> int:
+        """One batched decode step over all active slots; returns #active."""
+        self._admit()
+        active = [i for i in range(self.b) if self.slots[i] is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray(self.cur_token, dtype=jnp.int32)[:, None]
+        pos = mk_positions(
+            self.cfg, jnp.asarray(self.slot_len - 1, dtype=jnp.int32)[:, None]
+        )
+        logits, self.caches = self._decode(self.params, self.caches, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        now = time.perf_counter()
+        for i in active:
+            req = self.slots[i]
+            if self.greedy:
+                tok = int(nxt[i])
+            else:
+                key = jax.random.key((req.uid << 20) + len(req.generated))
+                tok = int(jax.random.categorical(key, logits[i]))
+            req.token_times.append(now)
+            req.generated.append(tok)
+            if req.on_token is not None:
+                req.on_token(req.uid, tok)
+            self.slot_len[i] += 1
+            self.cur_token[i] = tok
+            exhausted = len(req.generated) >= req.max_new_tokens
+            if tok == req.eos_id or exhausted or self.slot_len[i] >= self.max_len:
+                req.finish_t = now
+                self.done[req.uid] = req
+                self.slots[i] = None
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return self.done
+
+    def warmup(self) -> int:
+        """Pre-compile the prefill length buckets + the decode step; outputs
+        are discarded, engine caches are left untouched. Non-bucketed archs
+        (Mamba/hybrid prefill at exact prompt length) warm the decode step
+        only — their prefill shapes are not knowable in advance."""
+        buckets, b = [], 4
+        while self._bucketed and b < self.max_len:
+            buckets.append(b)
+            b *= 2
+        if self._bucketed:
+            buckets.append(self.max_len)
+        for t in dict.fromkeys(buckets):
+            toks = jnp.zeros((1, t), jnp.int32)
+            pos = mk_positions(self.cfg, jnp.arange(t, dtype=jnp.int32)[None])
+            self._prefill_into(self.params, self.caches, toks, pos,
+                               jnp.asarray([t - 1], dtype=jnp.int32),
+                               jnp.asarray(0, dtype=jnp.int32))
+        self._decode(self.params, self.caches,
+                     jnp.zeros((self.b, 1), jnp.int32),
+                     mk_positions(self.cfg, jnp.zeros((self.b, 1), jnp.int32)))
+        return len(buckets) + 1
+
+    def metrics(self) -> Dict[str, Any]:
+        return {
+            "runtime": "slots",
+            "requests_done": len(self.done),
+            "out_tokens": sum(len(r.generated) for r in self.done.values()),
+            "prefill_compiles": self.prefill_compiles,
+            **latency_metrics(self.done.values()),
+        }
 
 
 class ServeEngine:
-    """Slot-based continuous batching over a fixed decode batch."""
+    """Facade: freeze-once DA weights in front, one of two serving runtimes
+    behind (``PagedScheduler`` or the legacy slot runtime)."""
 
     def __init__(
         self,
@@ -85,6 +271,13 @@ class ServeEngine:
         greedy: bool = True,
         da_mode: Optional[str] = None,
         da_pin_modes: bool = True,
+        runtime: str = "auto",
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        prefill_chunk: int = 16,
+        prefill_lanes: Optional[int] = None,
+        token_budget: Optional[int] = None,
+        admission: str = "reserve",
     ):
         # da_mode: freeze float params through the DA artifact pipeline
         # ("auto" plans a backend per layer from measured + analytic costs;
@@ -110,15 +303,23 @@ class ServeEngine:
         self.params = params
         self.b = batch_size
         self.max_len = max_len
-        self.greedy = greedy
-        self.caches = init_caches(cfg, batch_size, max_len, cfg.dtype())
-        self._prefill_one = jax.jit(make_prefill_step(cfg))
-        self._decode = jax.jit(make_serve_step(cfg))
-        self.slots: List[Optional[Request]] = [None] * batch_size
-        self.slot_len = np.zeros(batch_size, dtype=np.int64)
-        self.cur_token = np.zeros(batch_size, dtype=np.int32)
-        self.queue: List[Request] = []
-        self.done: Dict[int, Request] = {}
+        if runtime == "auto":
+            all_attn = all(cfg.mixer_kind(p) == "attn"
+                           for p in range(cfg.period))
+            runtime = "paged" if all_attn else "slots"
+        self.runtime = runtime
+        if runtime == "paged":
+            self._rt = PagedScheduler(
+                cfg, params, batch_size=batch_size, max_len=max_len,
+                greedy=greedy, page_size=page_size, n_pages=n_pages,
+                prefill_chunk=prefill_chunk, prefill_lanes=prefill_lanes,
+                token_budget=token_budget, admission=admission,
+            )
+        elif runtime == "slots":
+            self._rt = _SlotRuntime(cfg, params, batch_size, max_len, greedy)
+        else:
+            raise ValueError(f"unknown runtime {runtime!r} "
+                             "(expected auto | paged | slots)")
 
     # -- freeze-once, serve-many ---------------------------------------------
     @classmethod
@@ -128,10 +329,11 @@ class ServeEngine:
         batch_size: int,
         max_len: int,
         greedy: bool = True,
+        **runtime_kw,
     ) -> "ServeEngine":
-        """Boot a serving engine from a persisted DA artifact: the packed
-        weights come straight off disk — no float params, no re-packing (the
-        paper's freeze-once premise, operationally)."""
+        """Boot the full serving runtime from a persisted DA artifact: the
+        packed weights come straight off disk — no float params, no
+        re-packing (the paper's freeze-once premise, operationally)."""
         from repro.core.freeze import load_artifact
 
         art = load_artifact(directory)
@@ -141,7 +343,7 @@ class ServeEngine:
                 "freeze_model(..., model_cfg=cfg) to make it servable"
             )
         eng = cls(art.model_cfg, art.params, batch_size, max_len,
-                  greedy=greedy)
+                  greedy=greedy, **runtime_kw)
         eng.artifact = art
         return eng
 
@@ -156,67 +358,34 @@ class ServeEngine:
             )
         return save_artifact(directory, self.artifact)
 
-    # -- admission -----------------------------------------------------------
+    # -- runtime delegation --------------------------------------------------
+    @property
+    def queue(self) -> List[Request]:
+        return self._rt.queue
+
+    @property
+    def done(self) -> Dict[int, Request]:
+        return self._rt.done
+
+    @property
+    def caches(self):
+        return self._rt.caches
+
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self._rt.submit(req)
 
-    def _admit(self) -> None:
-        for i in range(self.b):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self._prefill_slot(i, req)
-
-    def _prefill_slot(self, i: int, req: Request) -> None:
-        """Per-slot prefill (batch=1 caches then scatter into slot i).
-
-        A production engine prefills in a separate batched pass; here each
-        admission runs a b=1 prefill and copies the KV into the slot — simple
-        and exact."""
-        cfg = self.cfg
-        t0 = len(req.prompt)
-        caches1 = init_caches(cfg, 1, self.max_len, cfg.dtype())
-        toks = jnp.asarray(req.prompt, dtype=jnp.int32)[None]
-        pos = _mk_positions(cfg, jnp.arange(t0, dtype=jnp.int32)[None])
-        logits, caches1 = self._prefill_one(self.params, caches1, toks, pos)
-        self.caches = _scatter_slot(self.caches, caches1, i)
-        tok = int(jnp.argmax(logits[0])) if self.greedy else int(
-            jax.random.categorical(jax.random.key(req.uid), logits[0])
-        )
-        req.generated.append(tok)
-        self.slots[i] = req
-        self.slot_len[i] = t0 + 1
-        self.cur_token[i] = tok
-
-    # -- decode --------------------------------------------------------------
     def step(self) -> int:
-        """One batched decode step over all active slots; returns #active."""
-        self._admit()
-        active = [i for i in range(self.b) if self.slots[i] is not None]
-        if not active:
-            return 0
-        toks = jnp.asarray(self.cur_token, dtype=jnp.int32)[:, None]
-        pos = _mk_positions(
-            self.cfg, jnp.asarray(self.slot_len - 1, dtype=jnp.int32)[:, None]
-        )
-        logits, self.caches = self._decode(self.params, self.caches, toks, pos)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
-        for i in active:
-            req = self.slots[i]
-            tok = int(nxt[i])
-            req.generated.append(tok)
-            self.slot_len[i] += 1
-            self.cur_token[i] = tok
-            exhausted = len(req.generated) >= req.max_new_tokens
-            if tok == req.eos_id or exhausted or self.slot_len[i] >= self.max_len:
-                self.done[req.uid] = req
-                self.slots[i] = None
-        return len(active)
+        return self._rt.step()
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
-        for _ in range(max_steps):
-            if not self.step() and not self.queue:
-                break
-        return self.done
+    def run(self, max_steps: int = 100_000) -> Dict[int, Request]:
+        return self._rt.run(max_steps)
+
+    def warmup(self) -> int:
+        """Pre-compile every step-shape bucket of the active runtime."""
+        return self._rt.warmup()
+
+    def metrics(self) -> Dict[str, Any]:
+        return self._rt.metrics()
 
 
 def _is_frozen(params: Any) -> bool:
@@ -229,22 +398,3 @@ def _is_frozen(params: Any) -> bool:
             params, is_leaf=lambda x: isinstance(x, PackedWeights)
         )
     )
-
-
-def _scatter_slot(caches: Any, caches1: Any, slot: int) -> Any:
-    """Copy batch row 0 of caches1 into row ``slot`` of the engine caches.
-
-    Cache layouts: KVCache k/v [P, B, S, kv, hd]; MambaCache conv [P, B, C-1,
-    ch], ssm [P, B, H, Pd, S]; KVCache.length [P] is global (max over slots
-    drives nothing — per-slot lengths are tracked host-side and masked via
-    positions), so we take the elementwise max.
-    """
-
-    def one(big, small):
-        if big.ndim == 1:  # stacked scalar lengths [n_periods]
-            return jnp.maximum(big, small)
-        return jax.lax.dynamic_update_slice(
-            big, small.astype(big.dtype), (0, slot) + (0,) * (big.ndim - 2)
-        )
-
-    return jax.tree.map(one, caches, caches1)

@@ -1,0 +1,185 @@
+"""Block/paged KV cache for the continuous-batching serving runtime.
+
+The paper's premise (freeze-once serve-many) puts all serving cost in the
+decode hot loop, and the dominant state there is the KV cache. The dense
+slot layout (``[B, max_len, kv, hd]`` per layer) reserves worst-case memory
+for every batch row; this module replaces it with a vLLM-style paged layout:
+
+* **Page pool** — each attention layer owns ``k``/``v`` pools of shape
+  ``[n_pages, page_size, n_kv, hd]``. Pages are the allocation unit; a
+  request's KV lives on whichever physical pages the allocator handed it.
+* **Page table** — per request, a host-side list of physical page ids; the
+  device sees an int32 ``[B, table_width]`` array each step. Attention
+  *writes* scatter ``(page_id, offset)``-addressed rows into the pool and
+  *reads* gather the table back into a contiguous ``[B, S, kv, hd]`` view —
+  models index the cache through the table, never through dense slots.
+* **Garbage page** — physical page 0 is reserved. Pad tokens (batch lanes
+  that carry fewer real tokens than the step bucket) and unallocated table
+  entries point at it, so one fixed-shape jitted step serves any mix of
+  chunked-prefill and decode lanes: pad writes land in garbage, and the
+  per-row position mask keeps garbage out of every real row's softmax.
+
+The pool is functional state (threaded through jit like any cache); the
+allocator and tables are host state owned by the scheduler.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import PagedKVCache  # noqa: F401  (re-export)
+from repro.models.config import ModelConfig
+
+#: Physical page reserved for pad-token writes and unallocated table slots.
+GARBAGE_PAGE = 0
+
+
+def init_paged_caches(cfg: ModelConfig, n_pages: int, page_size: int,
+                      dtype) -> Dict[str, PagedKVCache]:
+    """Paged decode caches stacked over periods: {pos_i: [P, n_pages, ...]}.
+
+    Only attention mixers page (KV grows with the sequence); Mamba state is
+    O(1) per request and gains nothing from paging — models with mamba
+    mixers serve through the dense-slot runtime instead.
+    """
+    caches: Dict[str, PagedKVCache] = {}
+    for pos in range(cfg.period):
+        if cfg.mixer_kind(pos) != "attn":
+            raise ValueError(
+                f"paged KV caches cover attention mixers only; layer position "
+                f"{pos} is {cfg.mixer_kind(pos)!r} (serve this arch with the "
+                f"slot runtime)"
+            )
+        template = PagedKVCache.zeros(cfg, n_pages, page_size, dtype)
+        caches[f"pos_{pos}"] = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), template
+        )
+    return caches
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` tokens."""
+    return -(-n_tokens // page_size)
+
+
+def table_width(max_len: int, page_size: int) -> int:
+    """Device page-table width: pages covering ``max_len`` + the garbage
+    column (the last logical page, where pad positions point)."""
+    return pages_for(max_len, page_size) + 1
+
+
+def pad_position(max_len: int, page_size: int) -> int:
+    """The logical position pad tokens write to — start of the garbage
+    column. Strictly greater than every real position (< max_len rounded up
+    to pages), so ``kpos <= tpos`` masks it out of every real row."""
+    return (table_width(max_len, page_size) - 1) * page_size
+
+
+def table_array(tables: Sequence[Sequence[int]], width: int) -> np.ndarray:
+    """Host page-table lists → dense int32 [B, width] device operand.
+
+    Unallocated entries (and the trailing garbage column) point at
+    GARBAGE_PAGE; logical positions beyond a row's allocation are never
+    admitted by the position mask, so the placeholder is read-safe.
+    """
+    out = np.full((len(tables), width), GARBAGE_PAGE, dtype=np.int32)
+    for i, t in enumerate(tables):
+        if len(t) > width - 1:
+            raise ValueError(f"row {i} holds {len(t)} pages > table width "
+                             f"{width} (garbage column excluded)")
+        out[i, : len(t)] = t
+    return out
+
+
+class PagePool:
+    """Host-side physical-page allocator (free list + stats).
+
+    ``alloc`` returns ``None`` on exhaustion instead of raising — the
+    scheduler turns that into queue backpressure (requests wait) or
+    preemption, never a crash.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("pool needs >= 2 pages (page 0 is the garbage page)")
+        self.n_pages = n_pages
+        self._free: deque = deque(range(1, n_pages))  # page 0 reserved
+        self._allocs = 0
+        self._frees = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - 1 - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n physical pages, or None (backpressure) if the pool can't cover
+        the request — partial allocations are never handed out."""
+        if n > len(self._free):
+            return None
+        self._allocs += n
+        return [self._free.popleft() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not 1 <= p < self.n_pages:
+                raise ValueError(f"freeing invalid page {p}")
+            self._free.append(p)
+        self._frees += len(pages)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "n_pages": self.n_pages,
+            "free_pages": self.free_pages,
+            "used_pages": self.used_pages,
+            "alloc_count": self._allocs,
+            "free_count": self._frees,
+        }
+
+
+# ---------------------------------------------------------------------------
+# defrag: compact live pages into the low-index prefix of the pool
+# ---------------------------------------------------------------------------
+def _remap_pages(leaf: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Move pool pages src[i] → dst[i] on the pages axis (axis 0 for a
+    per-layer pool, axis 1 under the period stack)."""
+    axis = leaf.ndim - 4  # [..., n_pages, page_size, kv, hd]
+    moved = jnp.take(leaf, src, axis=axis)
+    if axis == 0:
+        return leaf.at[dst].set(moved)
+    if axis == 1:
+        return leaf.at[:, dst].set(moved)
+    raise ValueError(f"unexpected pool rank {leaf.ndim}")
+
+
+def defrag(caches, pool: PagePool, tables: List[List[int]]):
+    """Compact live pages to the front of the pool.
+
+    With full page-table indirection, pool fragmentation never costs decode
+    time — this exists to shrink the live footprint (snapshot / pool resize:
+    after compaction the high-water mark is ``used_pages + 1``). Returns the
+    remapped cache tree and rewrites ``pool``/``tables`` host state in place.
+    Decode output is bit-identical before and after (pages move, the tables
+    move with them).
+    """
+    live = sorted({p for t in tables for p in t})
+    mapping = {src: dst for dst, src in enumerate(live, start=1)}
+    moves = [(s, d) for s, d in mapping.items() if s != d]
+    if moves:
+        src = jnp.asarray([s for s, _ in moves], dtype=jnp.int32)
+        dst = jnp.asarray([d for _, d in moves], dtype=jnp.int32)
+        caches = jax.tree.map(lambda leaf: _remap_pages(leaf, src, dst), caches)
+    for t in tables:
+        t[:] = [mapping[p] for p in t]
+    pool._free = deque(range(len(live) + 1, pool.n_pages))
+    return caches

@@ -1,0 +1,538 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+The paper's freeze-once/serve-many premise puts all serving cost in the
+decode hot loop; this module is the periphery engineering around the
+constant-weight DA arrays — the piece DAISM and the RRAM benchmarking
+framework both identify as where in-memory VMM wins are made or lost.
+
+One fixed decode batch of ``batch_size`` lanes runs every tick. Because the
+page pool is batch-free (requests own pages, not batch rows), one tick can
+issue TWO economically-shaped calls of the same unified jitted step instead
+of one padded monolith: a compact chunked-prefill sub-batch
+(``[prefill_lanes, chunk]``, lanes still ingesting their prompt) and a pure
+decode batch (``[batch_size, 1]``) — chunked prefill proceeds beside the
+decode batch every tick without inflating its width, and a lane that
+finishes its prompt mid-tick starts decoding the same tick. Step shapes are
+length-bucketed to powers of two, so prefill compiles O(log chunk) shapes,
+not O(#prompt-lengths).
+
+Host-side state (the scheduler) vs device state (the paged pools):
+
+* admission queue with a token-budget policy — ``token_budget`` caps tokens
+  processed per step (decode lanes are reserved first; prefill chunks fill
+  the remainder), and ``admission="reserve"`` only admits a request when its
+  worst-case page demand fits beside the reservations of every running lane
+  (pure backpressure: the queue waits, nothing crashes);
+* ``admission="optimistic"`` admits on first-chunk fit and relies on
+  preemption — when a decoding lane cannot get a page, the youngest lane is
+  evicted back to the queue head (pages freed, KV recomputed on
+  re-admission, exactly reproducing its tokens under greedy decoding);
+* finished lanes free their pages immediately; lanes that make no progress
+  for ``stall_patience`` consecutive steps are preempted too;
+* per-request streaming callbacks (``Request.on_token``) and wall-clock
+  latency/throughput metrics (TTFT, inter-token p50/p99) come for free from
+  the host loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.sharding import shard_paged_caches
+from repro.models.config import ModelConfig
+from repro.models.model import forward
+from repro.serve.kvcache import (
+    GARBAGE_PAGE,
+    PagePool,
+    defrag,
+    init_paged_caches,
+    pad_position,
+    pages_for,
+    table_width,
+)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (re-exported by ``repro.serve.engine``)."""
+
+    uid: int
+    prompt: np.ndarray            # [T0] int32
+    max_new_tokens: int = 32
+    eos_id: int = -1              # -1 → never stops early
+    on_token: Optional[Callable[[int, int], None]] = None  # stream (uid, tok)
+    generated: Optional[List[int]] = None
+    # wall-clock metrics, stamped by the runtime
+    submit_t: float = 0.0
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+    token_times: Optional[List[float]] = None
+
+    def __post_init__(self):
+        if self.generated is None:
+            self.generated = []
+        if self.token_times is None:
+            self.token_times = []
+
+
+def latency_metrics(reqs) -> Dict[str, float]:
+    """TTFT and inter-token latency percentiles (ms) over finished requests."""
+    itl: List[float] = []
+    for r in reqs:
+        itl.extend(b - a for a, b in zip(r.token_times, r.token_times[1:]))
+    ttft = [r.first_token_t - r.submit_t for r in reqs if r.first_token_t]
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) * 1e3 if xs else 0.0
+
+    return {
+        "ttft_p50_ms": pct(ttft, 50),
+        "itl_p50_ms": pct(itl, 50),
+        "itl_p99_ms": pct(itl, 99),
+    }
+
+
+def mk_positions(cfg: ModelConfig, pos: jax.Array) -> jax.Array:
+    if cfg.mrope_sections:
+        return jnp.stack([pos, pos, pos], axis=-1)
+    return pos
+
+
+def pow2_bucket(n: int, lo: int = 1) -> int:
+    """Smallest power of two ≥ n (and ≥ lo) — the step-length buckets."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def width_buckets(b: int) -> List[int]:
+    """Batch-width ladder {1, 2, 3, 4, 6, 8, 12, …, b}: pow2 plus the
+    1.5× midpoints — a decode batch with 9 live lanes pays for 12 rows,
+    not 16. Still O(log) shapes."""
+    out, w = [], 1
+    while w < b:
+        out.append(w)
+        mid = w + w // 2
+        if w > 1 and mid < b:
+            out.append(mid)
+        w *= 2
+    out.append(b)
+    return out
+
+
+def width_bucket(n: int, b: int) -> int:
+    """Smallest ladder width ≥ n (capped at b)."""
+    for w in width_buckets(b):
+        if w >= n:
+            return w
+    return b
+
+
+def make_paged_step(cfg: ModelConfig):
+    """The unified serve step: (params, caches, tokens [B,T], positions,
+    page_table [B,W], last_idx [B]) → (logits [B,V], caches). T=1 is pure
+    decode; T>1 coalesces prefill chunks with decoding lanes (their single
+    real token rides in column 0, pad columns write to the garbage page)."""
+
+    def step(params, caches, tokens, positions, page_table, last_idx):
+        logits, caches = forward(
+            params, tokens, cfg, positions=positions, caches=caches,
+            update_cache=True, page_table=page_table, last_idx=last_idx,
+        )
+        return logits[:, 0], caches
+
+    return step
+
+
+@dataclasses.dataclass
+class _Lane:
+    """Host state of one occupied batch row."""
+
+    req: Request
+    pages: List[int]              # physical pages, in logical order
+    ctx: List[int]                # prompt + generated-so-far token ids
+    pos: int = 0                  # ctx tokens already written to the KV pool
+    admitted_t: float = 0.0
+    stalled_steps: int = 0
+
+    @property
+    def remaining(self) -> int:   # 1 → decoding; >1 → still prefilling
+        return len(self.ctx) - self.pos
+
+
+class PagedScheduler:
+    """Continuous batching + paged KV: the serving runtime behind
+    ``ServeEngine(runtime="paged")``."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        batch_size: int,
+        max_len: int,
+        greedy: bool = True,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        prefill_chunk: int = 16,
+        prefill_lanes: Optional[int] = None,
+        token_budget: Optional[int] = None,
+        admission: str = "reserve",
+        stall_patience: int = 64,
+    ):
+        if admission not in ("reserve", "optimistic"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        if n_pages is None:
+            # dense-slot-equivalent footprint: every lane can hold max_len
+            n_pages = batch_size * pages_for(max_len, page_size) + 1
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_size
+        self.max_len = max_len
+        self.greedy = greedy
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self.prefill_lanes = prefill_lanes or min(4, batch_size)
+        self.token_budget = token_budget or (batch_size + 2 * prefill_chunk)
+        self.admission = admission
+        self.stall_patience = stall_patience
+        self.W = table_width(max_len, page_size)
+        self.pad_pos = pad_position(max_len, page_size)
+        self.pool = PagePool(n_pages)
+        self.caches = shard_paged_caches(
+            init_paged_caches(cfg, n_pages, page_size, cfg.dtype())
+        )
+        self.lanes: List[Optional[_Lane]] = [None] * batch_size
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self._preempted: set = set()  # uids waiting on a full-ctx re-admit
+        # counters
+        self.steps = 0
+        self.out_tokens = 0
+        self.ctx_tokens = 0
+        self.preemptions = 0
+        self.step_compiles = 0
+        self._start_t: Optional[float] = None
+        base = make_paged_step(cfg)
+
+        def counted(*a):
+            self.step_compiles += 1  # trace-time side effect = 1 per bucket
+            return base(*a)
+
+        self._step = jax.jit(counted)
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        t0 = len(req.prompt)
+        if t0 >= self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt of {t0} tokens does not fit "
+                f"max_len={self.max_len}"
+            )
+        worst = self._worst_pages(t0 + len(req.generated), req.max_new_tokens
+                                  - len(req.generated))
+        if worst > self.pool.n_pages - 1:
+            raise ValueError(
+                f"request {req.uid} can never be served: needs {worst} pages "
+                f"but the pool holds {self.pool.n_pages - 1}"
+            )
+        req.submit_t = time.perf_counter()
+        self.queue.append(req)
+
+    def _worst_pages(self, ctx_len: int, rem_new: int) -> int:
+        return pages_for(min(ctx_len + max(rem_new, 0), self.max_len),
+                         self.page_size)
+
+    def _lane_reservation(self, lane: _Lane) -> int:
+        return self._worst_pages(
+            len(lane.ctx), lane.req.max_new_tokens - len(lane.req.generated)
+        )
+
+    def _admit(self) -> None:
+        for i in range(self.b):
+            if not self.queue:
+                return
+            if self.lanes[i] is not None:
+                continue
+            req = self.queue[0]
+            ctx = list(int(t) for t in req.prompt) + list(req.generated)
+            if self.admission == "reserve":
+                held = sum(self._lane_reservation(l)
+                           for l in self.lanes if l is not None)
+                worst = self._worst_pages(
+                    len(ctx), req.max_new_tokens - len(req.generated))
+                if held + worst > self.pool.n_pages - 1:
+                    return  # backpressure: head-of-line waits for pages
+            else:
+                # optimistic: first chunk must fit now, plus a few headroom
+                # pages for decode growth (anti-thrash watermark — without
+                # it a preempted request is re-admitted next tick and
+                # preempted again, replaying its prefill forever). A
+                # PREEMPTED request re-admits only when its whole
+                # accumulated context fits: resuming it on a first-chunk
+                # sliver would just replay-and-evict in a loop.
+                need = (len(ctx) if req.uid in self._preempted
+                        else min(len(ctx), self.prefill_chunk))
+                headroom = max(2, self.pool.n_pages // 16)
+                # cap at pool capacity: a request whose ctx+headroom exceeds
+                # the whole pool must still admit once the pool drains, or
+                # it would wait forever on a condition that cannot occur
+                want = min(pages_for(need, self.page_size) + headroom,
+                           self.pool.n_pages - 1)
+                if not self.pool.can_alloc(want):
+                    return
+                self._preempted.discard(req.uid)
+            self.queue.pop(0)
+            self.lanes[i] = _Lane(req=req, pages=[], ctx=ctx,
+                                  admitted_t=time.perf_counter())
+
+    # -- preemption / eviction -----------------------------------------------
+    def _preempt(self, i: int) -> None:
+        """Evict lane i back to the queue head: pages freed now, KV rebuilt
+        by replayed chunked prefill on re-admission (greedy decoding makes
+        the replay token-exact)."""
+        lane = self.lanes[i]
+        self.pool.free(lane.pages)
+        self.queue.insert(0, lane.req)
+        self._preempted.add(lane.req.uid)
+        self.lanes[i] = None
+        self.preemptions += 1
+
+    def _youngest_other(self, i: int) -> Optional[int]:
+        cands = [(j, l) for j, l in enumerate(self.lanes)
+                 if l is not None and j != i]
+        if not cands:
+            return None
+        return max(cands, key=lambda t: t[1].admitted_t)[0]
+
+    def _ensure_pages(self, lane: _Lane, n: int) -> int:
+        """Grow lane.pages to cover pos+n tokens; returns the n actually
+        covered — a prefill chunk shrinks to what free pages allow, 0 means
+        fully deferred (backpressure, not a crash)."""
+        while n > 0:
+            need = pages_for(lane.pos + n, self.page_size) - len(lane.pages)
+            if need <= 0:
+                return n
+            got = self.pool.alloc(need)
+            if got is not None:
+                lane.pages.extend(got)
+                return n
+            fit = ((len(lane.pages) + self.pool.free_pages) * self.page_size
+                   - lane.pos)
+            n = min(n - 1, max(fit, 0))
+        return 0
+
+    # -- the tick ------------------------------------------------------------
+    def step(self) -> int:
+        """One scheduler tick: admit, run a compact chunked-prefill sub-batch
+        (if any lane is still ingesting its prompt), then one pure decode
+        step over the full batch. Returns the number of active lanes."""
+        self._admit()
+        active = [(i, l) for i, l in enumerate(self.lanes) if l is not None]
+        if not active:
+            return 0
+        if self._start_t is None:
+            self._start_t = time.perf_counter()
+        self.steps += 1
+
+        progressed: set = set()
+        decode_count = sum(1 for _, l in active if l.remaining == 1)
+        prefill = [(i, l) for i, l in active if l.remaining > 1]
+        if prefill:
+            progressed |= self._prefill_phase(prefill, decode_count)
+        decode = [(i, l) for i, l in enumerate(self.lanes)
+                  if l is not None and l.remaining == 1]
+        if decode:
+            progressed |= self._decode_phase(decode)
+
+        active = [(i, l) for i, l in enumerate(self.lanes) if l is not None]
+        if active and not progressed:
+            # pool jammed: keep only the oldest lane (guaranteed servable by
+            # the submit-time capacity check), requeue the rest
+            oldest = min(active, key=lambda t: t[1].admitted_t)[0]
+            for i, _ in active:
+                if i != oldest:
+                    self._preempt(i)
+        for i, l in ((i, l) for i, l in enumerate(self.lanes)
+                     if l is not None):
+            if i in progressed:
+                l.stalled_steps = 0
+            else:
+                l.stalled_steps += 1
+                if l.stalled_steps > self.stall_patience:
+                    self._preempt(i)  # stalled: hand its pages to the rest
+        return sum(l is not None for l in self.lanes)
+
+    def _run_batch(self, rows, plan, n_rows: int, t_step: int) -> np.ndarray:
+        """Issue one call of the unified step for ``rows`` = [(batch_row,
+        lane_idx, lane)]. Pad rows/columns carry the garbage position, so
+        their writes land in the garbage page and every real row's
+        ``kpos <= tpos`` mask excludes them."""
+        tokens = np.zeros((n_rows, t_step), np.int32)
+        positions = np.full((n_rows, t_step), self.pad_pos, np.int32)
+        last_idx = np.zeros((n_rows,), np.int32)
+        table = np.full((n_rows, self.W), GARBAGE_PAGE, np.int32)
+        for r, i, l in rows:
+            n = plan[i]
+            tokens[r, :n] = l.ctx[l.pos : l.pos + n]
+            positions[r, :n] = np.arange(l.pos, l.pos + n)
+            last_idx[r] = n - 1
+            table[r, : len(l.pages)] = l.pages
+        logits, self.caches = self._step(
+            self.params, self.caches, jnp.asarray(tokens),
+            mk_positions(self.cfg, jnp.asarray(positions)),
+            jnp.asarray(table), jnp.asarray(last_idx),
+        )
+        return np.asarray(logits)
+
+    def _prefill_phase(self, prefill, decode_count: int) -> set:
+        """Up to ``prefill_lanes`` ingesting lanes advance by one chunk each
+        in a compact [prefill_lanes, T_bucket] sub-batch — the page pool is
+        batch-free, so prefill never has to ride (and widen) the decode
+        batch. The token budget is what's left after the decode lanes take
+        their 1 token each."""
+        # with no decode lanes, budget == token_budget >= 1 here, so prefill
+        # always advances
+        budget = self.token_budget - decode_count
+        if budget <= 0 and decode_count > 0:
+            return set()  # decode saturates the budget this tick
+        sel = sorted(prefill, key=lambda t: t[1].admitted_t)
+        sel = sel[: self.prefill_lanes]
+        plan: Dict[int, int] = {}
+        for i, l in sel:
+            n = min(l.remaining, self.prefill_chunk, budget)
+            n = self._ensure_pages(l, n)  # may shrink or defer: backpressure
+            plan[i] = n
+            budget -= n
+        rows = [(r, i, l) for r, (i, l) in enumerate(
+            (i, l) for i, l in sel if plan[i] > 0)]
+        if not rows:
+            return set()
+        # cap at prefill_chunk so a non-pow2 chunk size uses the shape
+        # warmup() compiled, not a one-off pow2 round-up
+        t_step = min(pow2_bucket(max(plan[i] for _, i, _ in rows)),
+                     self.prefill_chunk)
+        logits = self._run_batch(rows, plan, self.prefill_lanes, t_step)
+        now = time.perf_counter()
+        for r, i, l in rows:
+            l.pos += plan[i]
+            self.ctx_tokens += plan[i]
+            if l.remaining == 0:  # chunk covered the last unseen token
+                self._sample(i, l, logits[r], now)
+        return {i for _, i, _ in rows}
+
+    def _decode_phase(self, decode) -> set:
+        """All decoding lanes advance one token in a [batch, 1] step; a lane
+        that cannot get its next page preempts the youngest other lane."""
+        ready = set()
+        for i, l in sorted(decode, key=lambda t: t[1].admitted_t):
+            if self.lanes[i] is not l:
+                continue  # preempted as a victim earlier in this loop
+            got = self._ensure_pages(l, 1)
+            while got == 0:
+                victim = self._youngest_other(i)
+                if victim is None:
+                    break
+                self._preempt(victim)
+                got = self._ensure_pages(l, 1)
+            if got:
+                ready.add(i)
+        live = [(i, l) for i, l in decode
+                if i in ready and self.lanes[i] is l]
+        if not live:
+            return set()
+        plan = {i: 1 for i, _ in live}
+        # lanes compact into a bucketed width (requests own pages, not
+        # batch rows, so a half-empty batch never pays full-width compute)
+        width = width_bucket(len(live), self.b)
+        rows = [(r, i, l) for r, (i, l) in enumerate(live)]
+        logits = self._run_batch(rows, plan, width, 1)
+        now = time.perf_counter()
+        for r, i, l in rows:
+            l.pos += 1
+            self.ctx_tokens += 1
+            self._sample(i, l, logits[r], now)
+        return {i for i, _ in live}
+
+    def _sample(self, i: int, lane: _Lane, row: np.ndarray, now: float) -> None:
+        req = lane.req
+        if self.greedy:
+            tok = int(np.argmax(row))
+        else:
+            key = jax.random.key((req.uid << 20) + len(req.generated))
+            tok = int(jax.random.categorical(key, jnp.asarray(row)))
+        if not req.generated:
+            req.first_token_t = now
+        req.token_times.append(now)
+        req.generated.append(tok)
+        lane.ctx.append(tok)
+        self.out_tokens += 1
+        if req.on_token is not None:
+            req.on_token(req.uid, tok)
+        finished = (
+            tok == req.eos_id
+            or len(req.generated) >= req.max_new_tokens
+            or len(lane.ctx) >= self.max_len
+        )
+        if finished:
+            req.finish_t = now
+            self.pool.free(lane.pages)
+            self.done[req.uid] = req
+            self.lanes[i] = None
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return self.done
+
+    def warmup(self) -> int:
+        """Pre-compile every step-shape bucket (decode widths × prefill
+        chunk buckets). The dummy batches carry only pad rows, so writes
+        land in the garbage page and no live request state is touched.
+        Returns the number of shapes compiled."""
+        shapes = [(w, 1) for w in width_buckets(self.b)]
+        t = 1
+        while t < self.prefill_chunk:
+            shapes.append((self.prefill_lanes, t))
+            t *= 2
+        shapes.append((self.prefill_lanes, self.prefill_chunk))
+        shapes = list(dict.fromkeys(shapes))
+        for bw, ts in shapes:
+            tokens = jnp.zeros((bw, ts), jnp.int32)
+            positions = jnp.full((bw, ts), self.pad_pos, dtype=jnp.int32)
+            table = jnp.full((bw, self.W), GARBAGE_PAGE, dtype=jnp.int32)
+            last_idx = jnp.zeros((bw,), jnp.int32)
+            _, self.caches = self._step(
+                self.params, self.caches, tokens,
+                mk_positions(self.cfg, positions), table, last_idx,
+            )
+        return len(shapes)
+
+    # -- maintenance / observability -----------------------------------------
+    def defrag(self) -> None:
+        """Compact live pages to the pool's low-index prefix (the page tables
+        move with them; decode output is unchanged)."""
+        tables = [l.pages for l in self.lanes if l is not None]
+        self.caches = defrag(self.caches, self.pool, tables)
+
+    def metrics(self) -> Dict[str, Any]:
+        wall = (time.perf_counter() - self._start_t) if self._start_t else 0.0
+        return {
+            "runtime": "paged",
+            "requests_done": len(self.done),
+            "out_tokens": self.out_tokens,
+            "ctx_tokens": self.ctx_tokens,
+            "steps": self.steps,
+            "preemptions": self.preemptions,
+            "step_compiles": self.step_compiles,
+            "wall_s": wall,
+            "tokens_per_s": self.out_tokens / wall if wall > 0 else 0.0,
+            "pool": self.pool.stats(),
+            **latency_metrics(self.done.values()),
+        }

@@ -92,9 +92,9 @@ def test_ragged_decode_positions():
     caches = init_caches(cfg, 2, 24, jnp.float32)
     lg1, c1 = forward(params, p1, cfg, caches=init_caches(cfg, 1, 24, jnp.float32), update_cache=True)
     lg2, c2 = forward(params, p2, cfg, caches=init_caches(cfg, 1, 24, jnp.float32), update_cache=True)
-    from repro.serve.engine import _scatter_slot
-    caches = _scatter_slot(caches, c1, 0)
-    caches = _scatter_slot(caches, c2, 1)
+    from repro.serve.engine import scatter_cache_row
+    caches = scatter_cache_row(caches, c1, 0)
+    caches = scatter_cache_row(caches, c2, 1)
     tok = jnp.asarray([[int(jnp.argmax(lg1[0, -1]))], [int(jnp.argmax(lg2[0, -1]))]], dtype=jnp.int32)
     pos = jnp.asarray([[5], [9]], dtype=jnp.int32)
     lg, _ = forward(params, tok, cfg, positions=pos, caches=caches)

@@ -1,0 +1,107 @@
+"""Paged KV cache unit tests: page math, the host-side pool allocator,
+page-table materialization, and defrag (compaction moves pages, never
+meaning)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.kvcache import (
+    GARBAGE_PAGE,
+    PagedKVCache,
+    PagePool,
+    defrag,
+    pad_position,
+    pages_for,
+    table_array,
+    table_width,
+)
+
+
+def test_page_math():
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    # table width = pages covering max_len + the garbage column
+    assert table_width(24, 8) == 4
+    assert table_width(25, 8) == 5
+    # pad position sits at the start of the garbage column, strictly past
+    # every legal real position
+    assert pad_position(24, 8) == 24
+    assert pad_position(20, 8) == 24
+    assert pad_position(20, 8) > 20 - 1
+
+
+def test_pool_alloc_free_exhaustion():
+    pool = PagePool(6)  # page 0 reserved → 5 usable
+    assert pool.free_pages == 5
+    a = pool.alloc(3)
+    assert a is not None and len(a) == 3 and GARBAGE_PAGE not in a
+    assert pool.used_pages == 3
+    # exhaustion returns None (backpressure), never a partial allocation
+    assert pool.alloc(3) is None
+    assert pool.free_pages == 2
+    b = pool.alloc(2)
+    assert pool.free_pages == 0 and pool.alloc(1) is None
+    pool.free(a + b)
+    assert pool.free_pages == 5
+    stats = pool.stats()
+    assert stats["alloc_count"] == 5 and stats["free_count"] == 5
+
+
+def test_pool_rejects_bad_frees_and_tiny_pools():
+    pool = PagePool(4)
+    with pytest.raises(ValueError):
+        pool.free([0])  # the garbage page is never allocatable
+    with pytest.raises(ValueError):
+        pool.free([4])  # out of range
+    with pytest.raises(ValueError):
+        PagePool(1)  # no room beside the garbage page
+
+
+def test_table_array():
+    t = table_array([[3, 1], [2], []], width=4)
+    assert t.dtype == np.int32 and t.shape == (3, 4)
+    np.testing.assert_array_equal(t[0], [3, 1, GARBAGE_PAGE, GARBAGE_PAGE])
+    np.testing.assert_array_equal(t[2], [GARBAGE_PAGE] * 4)
+    with pytest.raises(ValueError):
+        # the garbage column may never be claimed by real pages
+        table_array([[1, 2, 3, 4]], width=4)
+
+
+def _pool_leaves(n_pages, ps, stacked: bool):
+    """k/v pools whose value at (page, slot) encodes the page id — any page
+    move that forgets to move the table (or vice versa) is visible."""
+    kv, hd = 2, 3
+    base = (
+        jnp.arange(n_pages, dtype=jnp.float32)[:, None, None, None]
+        * jnp.ones((n_pages, ps, kv, hd))
+    )
+    if stacked:
+        base = jnp.stack([base, base + 100.0])  # period dim [P=2, pages, ...]
+    return PagedKVCache(k=base, v=base + 0.5)
+
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_defrag_compacts_and_preserves_gathered_content(stacked):
+    n_pages, ps = 9, 4
+    pool = PagePool(n_pages)
+    # simulate fragmentation: pages 1..8 allocated, then all but 5,2,7 freed
+    all_pages = pool.alloc(8)
+    tables = [[5, 2], [7]]
+    pool.free([p for p in all_pages if p not in {5, 2, 7}])
+    caches = {"pos_0": _pool_leaves(n_pages, ps, stacked)}
+
+    def gathered(caches, tables):
+        leaf = caches["pos_0"].k
+        axis = leaf.ndim - 4
+        return [np.asarray(jnp.take(leaf, jnp.asarray(t), axis=axis))
+                for t in tables]
+
+    before = gathered(caches, tables)
+    caches = defrag(caches, pool, tables)
+    after = gathered(caches, tables)
+    # live pages now occupy the low-index prefix [1, 2, 3]
+    assert sorted(p for t in tables for p in t) == [1, 2, 3]
+    assert pool.free_pages == n_pages - 1 - 3
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a)

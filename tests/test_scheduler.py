@@ -1,0 +1,273 @@
+"""Continuous-batching scheduler invariants over the paged KV cache.
+
+The load-bearing properties: no cross-request token leakage under
+interleaved admit/finish/preempt, paged-attention reads bit-identical to the
+dense cache, page exhaustion → queue backpressure (never a crash), and
+length-bucketed compilation counts for both runtimes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, reduce_for_smoke
+from repro.models.model import forward, init_model
+from repro.serve.engine import Request, ServeEngine
+
+KEY = jax.random.key(0)
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Smoke model + 8 staggered prompts (lengths 3..10) + offline greedy
+    references — the ground truth every engine configuration must hit."""
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
+                              moe_dropless=True)
+    params = init_model(KEY, cfg)
+    rng = np.random.default_rng(7)
+    prompts = {uid: rng.integers(0, cfg.vocab, 3 + uid) for uid in range(8)}
+    refs = {}
+    for uid, pr in prompts.items():
+        toks = list(pr)
+        for _ in range(MAX_NEW):
+            lg, _ = forward(params, jnp.asarray(toks, dtype=jnp.int32)[None],
+                            cfg)
+            toks.append(int(jnp.argmax(lg[0, -1])))
+        refs[uid] = toks[len(pr):]
+    return cfg, params, prompts, refs
+
+
+def _submit_all(eng, prompts, **kw):
+    for uid, pr in prompts.items():
+        eng.submit(Request(uid=uid, prompt=pr, max_new_tokens=MAX_NEW, **kw))
+
+
+def test_paged_matches_offline_and_streams(setup):
+    """8 staggered requests through 2 lanes: continuous batching with
+    chunked prefill coalesced into decode, every request token-identical to
+    its own offline greedy decode (no leakage), stream callbacks in order,
+    step compilations bounded by the power-of-two buckets."""
+    cfg, params, prompts, refs = setup
+    streamed = {}
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32, page_size=8)
+    assert eng.runtime == "paged"
+    for uid, pr in prompts.items():
+        eng.submit(Request(
+            uid=uid, prompt=pr, max_new_tokens=MAX_NEW,
+            on_token=lambda u, t: streamed.setdefault(u, []).append(t),
+        ))
+    done = eng.run()
+    assert sorted(done) == sorted(prompts)
+    for uid in prompts:
+        assert done[uid].generated == refs[uid], uid
+        assert streamed[uid] == refs[uid], uid
+    m = eng.metrics()
+    # step shapes are pow2-bucketed (decode width × prefill chunk length)
+    # → O(log) compilations regardless of the prompt-length mix
+    assert m["step_compiles"] <= 6, m["step_compiles"]
+    assert m["out_tokens"] == 8 * MAX_NEW
+    assert m["requests_done"] == 8 and m["tokens_per_s"] > 0
+    assert m["pool"]["used_pages"] == 0  # finished lanes freed their pages
+
+
+def test_interleaved_admit_finish_preempt_no_leakage(setup):
+    """Admissions mid-flight + a forced preemption + pool-pressure
+    preemptions: every request still reproduces its offline tokens exactly
+    (preemption recomputes KV by replayed prefill; greedy decode makes the
+    replay token-exact)."""
+    cfg, params, prompts, refs = setup
+    eng = ServeEngine(cfg, params, batch_size=4, max_len=32, page_size=4,
+                      n_pages=13, admission="optimistic")
+    first = {u: prompts[u] for u in list(prompts)[:4]}
+    rest = {u: prompts[u] for u in list(prompts)[4:]}
+    _submit_all(eng, first)
+    eng.step()  # one tick: chunked prefill + first decode, lanes still live
+    # force one deterministic preemption of an occupied lane
+    sched = eng._rt
+    victims = [i for i, l in enumerate(sched.lanes) if l is not None]
+    assert victims, "tick finished every request; nothing left to preempt"
+    sched._preempt(victims[-1])
+    _submit_all(eng, rest)  # interleaved admits
+    done = eng.run()
+    assert sorted(done) == sorted(prompts)
+    for uid in prompts:
+        assert done[uid].generated == refs[uid], uid
+    m = eng.metrics()
+    assert m["preemptions"] >= 1
+    assert m["pool"]["used_pages"] == 0
+
+
+def test_page_exhaustion_is_backpressure_not_crash(setup):
+    """A pool that fits ~one request at a time: reservation admission parks
+    the rest in the queue (observable backpressure) and everything still
+    completes correctly."""
+    cfg, params, prompts, refs = setup
+    # worst case per request: pages_for(10 + 4, 4) = 4 pages; capacity 5
+    eng = ServeEngine(cfg, params, batch_size=4, max_len=32, page_size=4,
+                      n_pages=6, admission="reserve")
+    subset = {u: prompts[u] for u in list(prompts)[:5]}
+    _submit_all(eng, subset)
+    saw_backpressure = False
+    while eng.step() or eng.queue:
+        concurrent = sum(l is not None for l in eng._rt.lanes)
+        saw_backpressure |= (len(eng.queue) > 0 and concurrent >= 1)
+        assert concurrent <= 2  # the pool cannot host more side by side
+    done = eng.done
+    assert sorted(done) == sorted(subset)
+    for uid in subset:
+        assert done[uid].generated == refs[uid], uid
+    assert saw_backpressure
+
+
+def test_impossible_requests_raise(setup):
+    cfg, params, _, _ = setup
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32, page_size=4,
+                      n_pages=4)
+    with pytest.raises(ValueError):  # needs more pages than the pool owns
+        eng.submit(Request(uid=0, prompt=np.arange(20), max_new_tokens=8))
+    with pytest.raises(ValueError):  # prompt beyond max_len
+        eng.submit(Request(uid=1, prompt=np.arange(40), max_new_tokens=1))
+
+
+def test_preempted_oversized_request_readmits(setup):
+    """Regression: a preempted request whose full context + headroom exceeds
+    the whole pool must still re-admit once the pool drains — it must not
+    wait forever on a condition that can never hold."""
+    cfg, params, _, _ = setup
+    rng = np.random.default_rng(13)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32, page_size=4,
+                      n_pages=6, admission="optimistic", prefill_chunk=4)
+    eng.submit(Request(uid=1, prompt=rng.integers(0, cfg.vocab, 8),
+                       max_new_tokens=11))
+    eng.submit(Request(uid=2, prompt=rng.integers(0, cfg.vocab, 16),
+                       max_new_tokens=4))
+    done = eng.run(max_steps=500)
+    assert sorted(done) == [1, 2]
+    assert len(done[2].generated) == 4
+
+
+def test_slot_prefill_compile_count(setup):
+    """Satellite: 10 distinct prompt lengths → ≤ 4 prefill compilations
+    (power-of-two length buckets, slot index is a traced operand)."""
+    cfg, params, _, _ = setup
+    rng = np.random.default_rng(11)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32, runtime="slots")
+    for uid in range(10):
+        eng.submit(Request(uid=uid, prompt=rng.integers(0, cfg.vocab, 3 + uid),
+                           max_new_tokens=2))
+    done = eng.run()
+    assert sorted(done) == list(range(10))
+    assert eng._rt.prefill_compiles <= 4, eng._rt.prefill_compiles
+
+
+def test_paged_tokens_identical_to_slot_engine(setup):
+    """Acceptance: on the same frozen DA artifact, the paged runtime and the
+    dense-slot runtime emit identical tokens for the same request set."""
+    from repro.core.da import DAConfig
+    from repro.core.freeze import freeze_model
+
+    cfg, params, prompts, _ = setup
+    art = freeze_model(params, DAConfig(x_signed=True),
+                       mode="bitplane_stacked", model_cfg=cfg)
+    subset = {u: prompts[u] for u in list(prompts)[:3]}
+    outs = {}
+    for runtime in ("slots", "paged"):
+        eng = ServeEngine(cfg, art.params, batch_size=2, max_len=32,
+                          runtime=runtime)
+        _submit_all(eng, subset)
+        outs[runtime] = {u: r.generated for u, r in eng.run().items()}
+    assert outs["paged"] == outs["slots"]
+
+
+def test_defrag_mid_serve_is_transparent(setup):
+    cfg, params, prompts, refs = setup
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32, page_size=4)
+    subset = {u: prompts[u] for u in list(prompts)[:3]}
+    _submit_all(eng, subset)
+    for _ in range(3):
+        eng.step()
+    eng._rt.defrag()  # pages move, tables move with them
+    done = eng.run()
+    for uid in subset:
+        assert done[uid].generated == refs[uid], uid
+
+
+def test_auto_runtime_falls_back_to_slots_for_ssm():
+    """Mamba state is O(1) per request — nothing to page; auto picks the
+    slot runtime, and asking for paging explicitly is a clear error."""
+    cfg = reduce_for_smoke(ARCHS["mamba2-780m"])
+    params = init_model(KEY, cfg)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=16)
+    assert eng.runtime == "slots"
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, batch_size=2, max_len=16, runtime="paged")
+
+
+def test_ssm_slot_prefill_not_padded():
+    """Regression: the Mamba/SSD recurrence has no position mask, so padded
+    prefill would fold pad tokens into the carried conv/ssm state. SSM
+    archs prefill at exact prompt length and must match offline greedy."""
+    cfg = reduce_for_smoke(ARCHS["mamba2-780m"])
+    params = init_model(KEY, cfg)
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=16)
+    prompt = np.random.default_rng(17).integers(0, cfg.vocab, 5)  # pad-prone
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=3))
+    done = eng.run()
+    toks = list(prompt)
+    for _ in range(3):
+        lg, _ = forward(params, jnp.asarray(toks, dtype=jnp.int32)[None], cfg)
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    assert done[0].generated == toks[len(prompt):]
+
+
+def test_paged_attention_bit_identical_to_dense_cache():
+    """The gather-based paged read is EXACT: with identical cache content
+    and matching gathered shapes, decode outputs are bit-identical to the
+    dense [B, S] cache path."""
+    from repro.models.attention import KVCache, attention_forward, \
+        init_attention
+    from repro.serve.kvcache import PagedKVCache, pad_position, pages_for, \
+        table_array, table_width
+
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
+                              moe_dropless=True)
+    p = init_attention(jax.random.key(1), cfg)
+    b, ps, max_len = 2, 8, 24
+    w = table_width(max_len, ps)
+    s = w * ps  # dense cache sized to the gathered view → same op shapes
+    lens = [13, 7]
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    k_rows = jax.random.normal(jax.random.key(2), (b, max(lens), kv, hd))
+    v_rows = jax.random.normal(jax.random.key(3), (b, max(lens), kv, hd))
+
+    dense_k = jnp.zeros((b, s, kv, hd))
+    dense_v = jnp.zeros((b, s, kv, hd))
+    n_pages = 1 + b * pages_for(max_len, ps)
+    pool_k = jnp.zeros((n_pages, ps, kv, hd))
+    pool_v = jnp.zeros((n_pages, ps, kv, hd))
+    tables, nxt = [], 1
+    for i, ln in enumerate(lens):
+        dense_k = dense_k.at[i, :ln].set(k_rows[i, :ln])
+        dense_v = dense_v.at[i, :ln].set(v_rows[i, :ln])
+        pages = list(range(nxt, nxt + pages_for(ln, ps)))
+        nxt += len(pages)
+        tables.append(pages)
+        for j, pg in enumerate(pages):
+            n = min(ps, ln - j * ps)
+            pool_k = pool_k.at[pg, :n].set(k_rows[i, j * ps : j * ps + n])
+            pool_v = pool_v.at[pg, :n].set(v_rows[i, j * ps : j * ps + n])
+
+    x = jax.random.normal(jax.random.key(4), (b, 1, cfg.d_model))
+    pos = jnp.asarray([[ln] for ln in lens], dtype=jnp.int32)
+    y_dense, _ = attention_forward(
+        p, x, cfg, pos,
+        cache=KVCache(k=dense_k, v=dense_v, length=jnp.asarray(max(lens))),
+    )
+    y_paged, _ = attention_forward(
+        p, x, cfg, pos, cache=PagedKVCache(k=pool_k, v=pool_v),
+        page_table=jnp.asarray(table_array(tables, w)),
+    )
+    assert pad_position(max_len, ps) >= max_len  # pads land past real rows
+    np.testing.assert_array_equal(np.asarray(y_dense), np.asarray(y_paged))

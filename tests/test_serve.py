@@ -22,10 +22,11 @@ def _cfg(name="qwen3-8b", **kw):
 
 
 @pytest.mark.slow
-def test_continuous_batching_matches_offline():
+@pytest.mark.parametrize("runtime", ["paged", "slots"])
+def test_continuous_batching_matches_offline(runtime):
     cfg = _cfg()
     params = init_model(KEY, cfg)
-    eng = ServeEngine(cfg, params, batch_size=2, max_len=32)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32, runtime=runtime)
     rng = np.random.default_rng(1)
     prompts = {uid: rng.integers(0, cfg.vocab, 4 + uid) for uid in range(4)}
     for uid, pr in prompts.items():
