@@ -30,6 +30,11 @@ import time
 import jax
 import numpy as np
 
+try:  # run as `python benchmarks/serve_throughput.py` (script dir on path)
+    from stamp import bench_stamp
+except ImportError:  # imported as a module from the repo root
+    from benchmarks.stamp import bench_stamp
+
 from repro.configs.registry import ARCHS
 from repro.core.da import DAConfig
 from repro.core.freeze import freeze_model
@@ -88,7 +93,7 @@ def _measure(eng, cfg, requests):
     def pct(q):
         return float(np.percentile(itl, q)) * 1e3 if itl else 0.0
 
-    return {
+    out = {
         "requests": len(uids),
         "out_tokens": toks,
         "wall_s": round(wall, 3),
@@ -96,6 +101,17 @@ def _measure(eng, cfg, requests):
         "itl_p50_ms": round(pct(50), 3),
         "itl_p99_ms": round(pct(99), 3),
     }
+    spec = eng.metrics().get("spec")
+    if spec:  # speculation on: report acceptance + draft/verify effort
+        out["spec"] = {
+            "provider": spec["provider"],
+            "acceptance_rate": round(spec["acceptance_rate"], 4),
+            "draft_steps": spec["draft_steps"],
+            "verify_steps": spec["verify_steps"],
+            "disabled_requests": spec["disabled_requests"],
+            "enabled_requests": spec["enabled_requests"],
+        }
+    return out
 
 
 def bench_decode(frozen, cfg, batch, max_new, max_len):
@@ -198,7 +214,7 @@ def main():
 
     result = {
         "bench": "serve_decode",
-        "device": jax.default_backend(),
+        **bench_stamp(seed=0),
         "model": cfg.name,
         "da_mode": "auto",
         "quick": args.quick,

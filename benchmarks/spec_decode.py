@@ -1,0 +1,199 @@
+"""Speculative-decoding throughput: the truncated-bitplane self-draft vs the
+non-speculative paged baseline, on one frozen DA artifact.
+
+    PYTHONPATH=src python benchmarks/spec_decode.py            # full
+    PYTHONPATH=src python benchmarks/spec_decode.py --quick    # CI-sized
+
+Writes ``artifacts/BENCH_spec_decode.json`` (override with ``--out``):
+decode tokens/s at batch 1 and 8 for the baseline paged runtime and for
+spec decoding with the ``bitplane`` drafter (plus a ``layerskip`` reference
+point), the per-batch ``speedup`` multiples, and the acceptance statistics
+the scheduler tracks (acceptance rate, draft/verify step counts,
+speculation on/off state).  Everything is stamped with git sha / seed /
+device via ``stamp.py`` so the trajectory is comparable across PRs.
+
+Regime notes (what the numbers mean):
+
+* The artifact is pinned to the **serial ``bitplane`` backend** — the
+  paper-faithful bit-serial execution, one weight pass per input bit-plane.
+  That is the regime the drafter targets: truncating to ``draft_x_bits``
+  of ``x_bits`` planes cuts the draft's weight traffic proportionally
+  (exactly the paper's cycle-count trade), and a gamma+1-token verify step
+  re-reads the same weights once for the whole window.
+* The bar (≥ 1.3×) is expected to clear at **batch 1** — the
+  weight-read-bound, latency-dominated regime speculative decoding exists
+  for.  At batch 8 the XLA-CPU integer matmuls are row-compute-bound (no
+  int BLAS), so the verify window pays ~linearly for its rows and the
+  measured speedup honestly degrades toward (and below) 1×; the JSON
+  records that crossover rather than hiding it.
+* The bench model is initialized tied-and-damped (LM head = scaled
+  embedding table, attenuated mixer outputs) so its greedy decoding has
+  the peaked-logit margins of a *trained* LM.  A raw random init has
+  near-zero top-1 margins, every drafter's acceptance collapses to ~0, and
+  the auto-disable floor simply switches speculation off — true, but it
+  benchmarks nothing.  Acceptance is reported; judge speedup jointly
+  with it.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+try:  # run as `python benchmarks/spec_decode.py` (script dir on sys.path)
+    from stamp import bench_stamp
+except ImportError:  # imported as a module from the repo root
+    from benchmarks.stamp import bench_stamp
+
+from repro.configs.registry import ARCHS
+from repro.core.da import DAConfig
+from repro.core.freeze import freeze_model
+from repro.models.model import init_model
+from repro.serve.engine import Request, ServeEngine
+from repro.spec import SpecConfig
+
+SEED = 0
+
+
+def build_artifact(quick: bool):
+    d = 256 if quick else 512
+    cfg = dataclasses.replace(
+        ARCHS["qwen3-8b"],
+        name="qwen3-spec-bench",
+        n_layers=4,
+        d_model=d,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=d // 8,
+        d_ff=2 * d,
+        vocab=2000 if quick else 8000,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+        moe_dropless=True,
+    )
+    params = init_model(jax.random.key(SEED), cfg)
+    # peaked-logit shaping (see module docstring): tie the LM head to a
+    # boosted embedding table and damp the mixer/FFN outputs so the
+    # residual stream keeps trained-LM-like greedy margins
+    params["embed"]["table"] = params["embed"]["table"] * 4.0
+    params["lm_head"]["w"] = params["embed"]["table"].T
+    for pos in params["periods"]:
+        blk = params["periods"][pos]
+        blk["mixer"]["wo"] = blk["mixer"]["wo"] * 0.1
+        blk["ffn"]["w_down"] = blk["ffn"]["w_down"] * 0.1
+    art = freeze_model(params, DAConfig(x_signed=True), mode="bitplane",
+                       model_cfg=cfg)
+    return cfg, art
+
+
+def _measure(eng, cfg, batch: int, max_new: int, rng, uid0: int) -> dict:
+    reqs = [Request(uid=uid0 + u, prompt=rng.integers(0, cfg.vocab, 8),
+                    max_new_tokens=max_new) for u in range(batch)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(done[r.uid].generated) for r in reqs)
+    out = {
+        "requests": batch,
+        "out_tokens": toks,
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(toks / wall, 2),
+    }
+    spec = eng.metrics().get("spec")
+    if spec:
+        out["spec"] = {
+            "provider": spec["provider"],
+            "gamma": spec["gamma"],
+            "acceptance_rate": round(spec["acceptance_rate"], 4),
+            "draft_steps": spec["draft_steps"],
+            "verify_steps": spec["verify_steps"],
+            "bonus_tokens": spec["bonus_tokens"],
+            "disabled_requests": spec["disabled_requests"],
+            "enabled_requests": spec["enabled_requests"],
+        }
+    return out
+
+
+def bench(cfg, frozen, batch, max_new, max_len, spec_cfg, repeats, rng):
+    """Interleaved repeats (CPU wall clocks are noisy); best run of each."""
+    engines = {}
+    for key, sc in (("baseline", None), ("spec", spec_cfg)):
+        eng = ServeEngine(cfg, frozen, batch_size=batch, max_len=max_len,
+                          runtime="paged", spec=sc)
+        eng.warmup()
+        _measure(eng, cfg, batch, 2, rng, uid0=90_000)  # host-loop warm pass
+        engines[key] = eng
+    runs = {"baseline": [], "spec": []}
+    for rep in range(repeats):
+        for key in ("baseline", "spec"):
+            runs[key].append(_measure(engines[key], cfg, batch, max_new, rng,
+                                      uid0=1000 * (rep + 1)))
+    out = {
+        "baseline": max(runs["baseline"], key=lambda m: m["tokens_per_s"]),
+        "spec": max(runs["spec"], key=lambda m: m["tokens_per_s"]),
+        "baseline_runs": [m["tokens_per_s"] for m in runs["baseline"]],
+        "spec_runs": [m["tokens_per_s"] for m in runs["spec"]],
+    }
+    out["speedup"] = round(
+        out["spec"]["tokens_per_s"] / out["baseline"]["tokens_per_s"], 3)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--gamma", type=int, default=3,
+                    help="draft tokens per round (gamma+1 = verify window; "
+                         "3 keeps the window an exact pow2 bucket)")
+    ap.add_argument("--draft-bits", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="interleaved repeats (default 3; 2 quick)")
+    ap.add_argument("--out", default="artifacts/BENCH_spec_decode.json")
+    args = ap.parse_args()
+    repeats = args.repeats or (2 if args.quick else 3)
+    max_new = 16 if args.quick else 32
+    max_len = 64
+
+    cfg, art = build_artifact(args.quick)
+    rng = np.random.default_rng(SEED)
+    bp = SpecConfig(provider="bitplane", gamma=args.gamma,
+                    draft_x_bits=args.draft_bits)
+    ls = SpecConfig(provider="layerskip", gamma=args.gamma)
+
+    result = {
+        "bench": "spec_decode",
+        **bench_stamp(seed=SEED),
+        "model": cfg.name,
+        "da_mode": "bitplane",
+        "quick": args.quick,
+        "gamma": args.gamma,
+        "draft_bits": args.draft_bits,
+        "max_new": max_new,
+        "bitplane": {},
+        "layerskip": {},
+    }
+    for batch in (1, 8):
+        result["bitplane"][f"b{batch}"] = bench(
+            cfg, art.params, batch, max_new, max_len, bp, repeats, rng)
+        print(f"bitplane  b={batch}: {result['bitplane'][f'b{batch}']}")
+    # one layerskip reference point (not part of the acceptance bar)
+    result["layerskip"]["b1"] = bench(
+        cfg, art.params, 1, max_new, max_len, ls, repeats, rng)
+    print(f"layerskip b=1: {result['layerskip']['b1']}")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

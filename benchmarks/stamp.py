@@ -1,0 +1,33 @@
+"""Provenance stamp shared by the benchmark writers: git sha, seed, device,
+timestamp — so a BENCH_*.json trajectory is comparable across PRs (same
+workload, which build, which hardware, which randomness)."""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+import time
+from typing import Optional
+
+
+def git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=pathlib.Path(__file__).resolve().parent,
+        )
+        return out.stdout.strip() or None
+    except Exception:
+        return None
+
+
+def bench_stamp(seed: Optional[int] = None) -> dict:
+    """The common stamp block every benchmark JSON carries."""
+    import jax
+
+    return {
+        "git_sha": git_sha(),
+        "seed": seed,
+        "device": jax.default_backend(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }

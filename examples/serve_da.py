@@ -79,6 +79,16 @@ def main():
                          "batching for attention stacks)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size (tokens) for the paged runtime")
+    ap.add_argument("--spec", default=None,
+                    choices=["bitplane", "layerskip"],
+                    help="self-speculative decoding: draft with a truncated-"
+                         "bitplane or early-exit pass over the SAME weights, "
+                         "verify in one batched full-precision step (greedy "
+                         "output is token-identical)")
+    ap.add_argument("--spec-gamma", type=int, default=4,
+                    help="draft tokens per speculative round")
+    ap.add_argument("--spec-draft-bits", type=int, default=4,
+                    help="bit-planes the truncated-bitplane draft evaluates")
     args = ap.parse_args()
     if args.save_artifact and args.mode == "float":
         raise SystemExit("--save-artifact requires a DA --mode (not float)")
@@ -86,11 +96,21 @@ def main():
         raise SystemExit("--artifact and --save-artifact are mutually "
                          "exclusive (the artifact already exists on disk)")
 
+    spec = None
+    if args.spec:
+        from repro.spec import SpecConfig
+
+        if args.spec == "bitplane" and args.mode == "float":
+            raise SystemExit("--spec bitplane truncates DA bit-planes; it "
+                             "needs a DA --mode (not float)")
+        spec = SpecConfig(provider=args.spec, gamma=args.spec_gamma,
+                          draft_x_bits=args.spec_draft_bits)
+
     t0 = time.perf_counter()
     if args.artifact:
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
                                         max_len=96, runtime=args.runtime,
-                                        page_size=args.page_size)
+                                        page_size=args.page_size, spec=spec)
         cfg = eng.cfg
         print(f"cold boot from {args.artifact} in "
               f"{time.perf_counter()-t0:.1f}s (zero float weights, "
@@ -103,7 +123,8 @@ def main():
         t0 = time.perf_counter()
         eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=96,
                           da_mode=args.mode,  # per-layer planned freeze
-                          runtime=args.runtime, page_size=args.page_size)
+                          runtime=args.runtime, page_size=args.page_size,
+                          spec=spec)
         if args.mode != "float":
             print(f"pre-VMM freeze ({args.mode}) in "
                   f"{time.perf_counter()-t0:.1f}s:")
@@ -126,6 +147,12 @@ def main():
     print(f"\nserved {len(done)} requests / {total_toks} tokens in {dt:.1f}s "
           f"({total_toks/dt:.1f} tok/s on CPU, continuous batching, "
           f"runtime={eng.runtime}, batch={args.batch})")
+    sm = eng.metrics().get("spec")
+    if sm:
+        print(f"spec[{sm['provider']}]: gamma={sm['gamma']} "
+              f"acceptance={sm['acceptance_rate']:.2f} "
+              f"rounds={sm['rounds']} bonus={sm['bonus_tokens']} "
+              f"disabled={sm['disabled_requests']}")
     for uid in sorted(done)[:4]:
         print(f"  req {uid}: {len(done[uid].generated)} tokens -> "
               f"{done[uid].generated[:8]}...")

@@ -87,6 +87,38 @@ def build_luts(w: jax.Array, group_size: int = 8) -> jax.Array:
     return luts  # [G, 2^L, N]
 
 
+def truncate_codes(xq: jax.Array, cfg: DAConfig, x_bits_eff: int):
+    """Drop the ``cfg.x_bits - x_bits_eff`` low-order bit-planes of ``xq``.
+
+    The DA accumulation is a sum over bit-planes, so evaluating only the top
+    ``x_bits_eff`` planes of the *same* weight artifact is a well-defined
+    cheap approximation (the paper's precision/effort trade, §II-C: fewer
+    bit-serial cycles against the same PMA contents).  Implemented as an
+    arithmetic right shift: for two's-complement codes ``xq = (xq >> d)·2^d
+    + (xq & (2^d−1))``, so running any backend on ``xq >> d`` under
+    ``x_bits = x_bits_eff`` and scaling the accumulator by ``2^d`` computes
+    exactly the top-plane partial sum — every backend (LUT gather, one-hot,
+    bit-plane forms, Pallas kernels) inherits partial-bits evaluation from
+    this one identity, with the per-cycle work genuinely reduced.
+
+    Returns ``(shifted codes, cfg with x_bits=x_bits_eff, d)``.
+    """
+    if not 1 <= x_bits_eff <= cfg.x_bits:
+        raise ValueError(
+            f"x_bits_eff={x_bits_eff} outside [1, cfg.x_bits={cfg.x_bits}]"
+        )
+    drop = cfg.x_bits - x_bits_eff
+    if drop == 0:
+        return xq, cfg, 0
+    if cfg.x_signed:
+        # sign-extend the low cfg.x_bits bits so the arithmetic shift sees
+        # the true two's-complement value even if callers carry raw patterns
+        sign = 1 << (cfg.x_bits - 1)
+        xq = (jnp.bitwise_and(xq, (1 << cfg.x_bits) - 1) ^ sign) - sign
+    shifted = jnp.right_shift(xq, drop)
+    return shifted, dataclasses.replace(cfg, x_bits=x_bits_eff), drop
+
+
 def bit_plane(xq: jax.Array, b: int) -> jax.Array:
     """Bit b of the (two's-complement or unsigned) integer codes, in {0,1}."""
     return jnp.bitwise_and(jnp.right_shift(xq, b), 1)

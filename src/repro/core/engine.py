@@ -65,6 +65,7 @@ serialize → shard → serve).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -85,6 +86,7 @@ from repro.core.da import (
     da_vmm_lut,
     da_vmm_onehot,
     num_groups,
+    truncate_codes,
 )
 from repro.core.quant import QTensor, quantize_acts_signed, quantize_weights
 
@@ -534,6 +536,13 @@ def set_cost_table(table: Optional[Dict[str, Dict[str, float]]]) -> None:
     """Install a cost table in-process (tests / autotune); None → reload."""
     global _COST_TABLE
     _COST_TABLE = dict(table) if table is not None else None
+    _BUCKET_MISS_WARNED.clear()  # a new table resets the warn-once dedup
+
+
+#: (bucket, fallback backend) pairs already warned about — the bucket-miss
+#: diagnostic fires once per pair per process, not once per da_matmul call
+#: (a decode loop hits the same bucket thousands of times per second).
+_BUCKET_MISS_WARNED: set = set()
 
 
 def select_backend(
@@ -549,11 +558,27 @@ def select_backend(
         raise ValueError(
             f"no DA backend supports cfg={cfg} has_luts={has_luts}"
         )
-    costs = load_cost_table().get(shape_bucket(m, k, n, cfg.x_bits), {})
+    table = load_cost_table()
+    bucket = shape_bucket(m, k, n, cfg.x_bits)
+    costs = table.get(bucket, {})
     timed = [s for s in eligible if s.name in costs]
     if timed:
         return min(timed, key=lambda s: costs[s.name]).name
-    return _fallback_backend(m, cfg, has_luts, eligible)
+    choice = _fallback_backend(m, cfg, has_luts, eligible)
+    if table and (bucket, choice) not in _BUCKET_MISS_WARNED:
+        # an autotune cache exists but never timed this bucket's eligible
+        # backends: dispatch is running on the heuristic, which is worth one
+        # loud diagnostic — not one per call
+        _BUCKET_MISS_WARNED.add((bucket, choice))
+        warnings.warn(
+            f"autotune cache has no timings for bucket {bucket!r} (eligible: "
+            f"{', '.join(sorted(s.name for s in eligible))}); using the "
+            f"heuristic fallback {choice!r} — re-run "
+            "benchmarks/engine_autotune.py to tune it (warned once per "
+            "bucket/backend)",
+            stacklevel=2,
+        )
+    return choice
 
 
 def _fallback_backend(m, cfg, has_luts, eligible) -> str:
@@ -570,6 +595,46 @@ def _fallback_backend(m, cfg, has_luts, eligible) -> str:
 # ---------------------------------------------------------------------------
 # Execution entry points
 # ---------------------------------------------------------------------------
+
+#: Process-wide draft precision (see :func:`x_bits_override`); None → full.
+_X_BITS_EFF: Optional[int] = None
+
+
+@contextlib.contextmanager
+def x_bits_override(x_bits_eff: Optional[int]):
+    """Trace-time partial-precision context (the DA-native draft pass).
+
+    Inside this context every :func:`da_matmul` / :func:`da_vmm` call that
+    does not pass an explicit ``x_bits_eff`` evaluates only the top
+    ``x_bits_eff`` bit-planes of its activations against the *same* packed
+    weights — no second model, no extra weight memory (see
+    :func:`repro.core.da.truncate_codes`).  The override is read at **trace
+    time**: wrap the function body you hand to ``jax.jit`` (a distinct
+    callable per precision), not the call of an already-compiled function.
+    ``None`` restores full precision.  This is what the speculative-decoding
+    subsystem's truncated-bitplane self-draft provider uses to run a whole
+    model forward at draft precision without threading a parameter through
+    every layer.
+    """
+    global _X_BITS_EFF
+    prev = _X_BITS_EFF
+    _X_BITS_EFF = x_bits_eff
+    try:
+        yield
+    finally:
+        _X_BITS_EFF = prev
+
+
+def effective_x_bits(cfg: DAConfig, x_bits_eff: Optional[int]) -> int:
+    """Resolve a call-site ``x_bits_eff`` against the override context and
+    the packed config; validates the range."""
+    eff = x_bits_eff if x_bits_eff is not None else _X_BITS_EFF
+    if eff is None:
+        return cfg.x_bits
+    eff = min(int(eff), cfg.x_bits)
+    if eff < 1:
+        raise ValueError(f"x_bits_eff={eff} must be >= 1")
+    return eff
 
 
 def _resolve_spec(
@@ -620,7 +685,7 @@ def _check_lut_shape(spec: BackendSpec, packed: PackedWeights,
 
 def da_vmm(
     xq: jax.Array, packed: PackedWeights, mode: Optional[str] = None,
-    cfg: Optional[DAConfig] = None,
+    cfg: Optional[DAConfig] = None, x_bits_eff: Optional[int] = None,
 ) -> jax.Array:
     """Integer-level engine entry: int codes [.., K] → int32 [.., N] == xq @ wq.
 
@@ -628,24 +693,36 @@ def da_vmm(
     dispatch; otherwise a registered backend name (capability-checked).
     ``cfg`` overrides the packed config (e.g. to flip x_signed for unsigned
     image inputs); group_size must match the packed LUTs.
+
+    ``x_bits_eff < cfg.x_bits`` evaluates only the top bit-planes (fewer
+    bit-serial cycles against the same artifact — the draft pass); defaults
+    to the :func:`x_bits_override` context, else full precision.
     """
     cfg = cfg if cfg is not None else packed.cfg
+    eff = effective_x_bits(cfg, x_bits_eff)
+    ecfg = dataclasses.replace(cfg, x_bits=eff)
     m = 1
     for d in xq.shape[:-1]:
         m *= int(d)
-    spec = _resolve_spec(mode, m, packed.k, packed.n, cfg, packed.has_luts,
+    spec = _resolve_spec(mode, m, packed.k, packed.n, ecfg, packed.has_luts,
                          default_mode=packed.mode)
-    _check_lut_shape(spec, packed, cfg)
+    _check_lut_shape(spec, packed, ecfg)
     lead = xq.shape[:-1]
     x2 = xq.reshape(-1, xq.shape[-1]).astype(jnp.int32)
-    acc = spec.fn(x2, packed, cfg)
+    x2, rcfg, drop = truncate_codes(x2, cfg, eff)
+    acc = spec.fn(x2, packed, rcfg)
+    if drop:
+        acc = acc * (1 << drop)
     return acc.reshape(lead + (packed.n,))
 
 
-@partial(jax.jit, static_argnames=("cfg", "backend"))
-def _da_matmul_jit(x2, packed, cfg, backend):
+@partial(jax.jit, static_argnames=("cfg", "backend", "x_bits_eff"))
+def _da_matmul_jit(x2, packed, cfg, backend, x_bits_eff):
     xqt = quantize_acts_signed(x2, bits=cfg.x_bits)
-    acc = _REGISTRY[backend].fn(xqt.q, packed, cfg)
+    xq, rcfg, drop = truncate_codes(xqt.q, cfg, x_bits_eff)
+    acc = _REGISTRY[backend].fn(xq, packed, rcfg)
+    if drop:
+        acc = acc * (1 << drop)
     return acc.astype(jnp.float32) * xqt.scale * packed.w_scale
 
 
@@ -654,6 +731,7 @@ def da_matmul(
     weights: PackedWeights,
     cfg: Optional[DAConfig] = None,
     mode: Optional[str] = None,
+    x_bits_eff: Optional[int] = None,
 ) -> jax.Array:
     """Float-level engine entry: quantize → DA integer VMM → dequantize.
 
@@ -662,19 +740,26 @@ def da_matmul(
     even on artifacts packed with a concrete mode); otherwise a registered
     backend name or legacy alias (capability-checked).  Activations are
     dynamically quantized to signed ``x_bits``.
+
+    ``x_bits_eff < cfg.x_bits`` truncates the quantized codes to their top
+    bit-planes before the integer VMM (same scale, same weights, fewer DA
+    cycles) — the truncated-bitplane draft pass.  Defaults to the
+    :func:`x_bits_override` context, else full precision.
     """
     cfg = cfg if cfg is not None else weights.cfg
     scfg = dataclasses.replace(cfg, x_signed=True)
+    eff = effective_x_bits(scfg, x_bits_eff)
     lead = x.shape[:-1]
     k = x.shape[-1]
     m = 1
     for d in lead:
         m *= int(d)
-    spec = _resolve_spec(mode, m, weights.k, weights.n, scfg,
+    rcfg = dataclasses.replace(scfg, x_bits=eff)  # dispatch sees draft cycles
+    spec = _resolve_spec(mode, m, weights.k, weights.n, rcfg,
                          weights.has_luts, default_mode=weights.mode)
-    _check_lut_shape(spec, weights, scfg)
+    _check_lut_shape(spec, weights, rcfg)
     x2 = x.reshape(-1, k).astype(jnp.float32)
-    y = _da_matmul_jit(x2, weights, scfg, spec.name)
+    y = _da_matmul_jit(x2, weights, scfg, spec.name, eff)
     return y.reshape(lead + (weights.n,))
 
 

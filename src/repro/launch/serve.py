@@ -6,6 +6,13 @@
 Freeze-once, serve-many: ``--quant da8-plan --save-artifact DIR`` persists
 the planned DA artifact; a later ``--artifact DIR`` boots straight from disk
 (no --arch, no float init, no re-packing).
+
+Speculative decoding (paged runtime): ``--spec bitplane`` drafts with a
+truncated-bitplane pass over the same artifact (``--spec-gamma``,
+``--spec-draft-bits``); ``--spec layerskip`` early-exits after
+``--spec-draft-periods`` period groups; ``--spec artifact`` drafts with a
+second frozen artifact (``--spec-draft-artifact DIR``).  Greedy output is
+token-identical to non-speculative serving.
 """
 import argparse
 import time
@@ -31,6 +38,20 @@ def main():
                          "batching for attention stacks)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size (tokens) for the paged runtime")
+    ap.add_argument("--spec", default=None,
+                    choices=["bitplane", "layerskip", "artifact"],
+                    help="speculative decoding draft provider (paged runtime; "
+                         "greedy output stays token-identical)")
+    ap.add_argument("--spec-gamma", type=int, default=4,
+                    help="draft tokens per speculative round")
+    ap.add_argument("--spec-draft-bits", type=int, default=4,
+                    help="bit-planes the truncated-bitplane self-draft "
+                         "evaluates (of the artifact's x_bits)")
+    ap.add_argument("--spec-draft-periods", type=int, default=None,
+                    help="period groups the layer-skip draft runs "
+                         "(default: half the stack)")
+    ap.add_argument("--spec-draft-artifact", default=None, metavar="DIR",
+                    help="frozen draft DAArtifact for --spec artifact")
     args = ap.parse_args()
     if args.artifact and (args.save_artifact or args.quant != "none"
                           or args.smoke or args.arch):
@@ -49,11 +70,22 @@ def main():
     from repro.serve.engine import Request, ServeEngine
     from repro.serve.quantize import da_memory_report
 
+    spec = None
+    if args.spec:
+        from repro.spec import SpecConfig
+
+        if args.spec == "artifact" and not args.spec_draft_artifact:
+            raise SystemExit("--spec artifact requires --spec-draft-artifact")
+        spec = SpecConfig(provider=args.spec, gamma=args.spec_gamma,
+                          draft_x_bits=args.spec_draft_bits,
+                          draft_periods=args.spec_draft_periods,
+                          draft_artifact=args.spec_draft_artifact)
+
     if args.artifact:
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
                                         max_len=args.max_len,
                                         runtime=args.runtime,
-                                        page_size=args.page_size)
+                                        page_size=args.page_size, spec=spec)
         cfg = eng.cfg
         print(f"arch={cfg.name} cold boot from {args.artifact} "
               f"(zero float weights, runtime={eng.runtime})")
@@ -75,7 +107,8 @@ def main():
                 "da8-lut": "da_lut", "da8-plan": "auto"}[args.quant]
         eng = ServeEngine(cfg, params, batch_size=args.batch,
                           max_len=args.max_len, da_mode=mode,
-                          runtime=args.runtime, page_size=args.page_size)
+                          runtime=args.runtime, page_size=args.page_size,
+                          spec=spec)
         if mode is not None:
             rep = da_memory_report(eng.params)
             print(f"pre-VMM freeze: {rep['da_matrices']} matrices"
@@ -95,6 +128,13 @@ def main():
     toks = sum(len(r.generated) for r in done.values())
     print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s)")
+    sm = eng.metrics().get("spec")
+    if sm:
+        print(f"spec[{sm['provider']}] gamma={sm['gamma']} "
+              f"acceptance={sm['acceptance_rate']:.2f} "
+              f"draft_steps={sm['draft_steps']} "
+              f"verify_steps={sm['verify_steps']} "
+              f"disabled={sm['disabled_requests']}")
 
 
 if __name__ == "__main__":

@@ -278,7 +278,14 @@ class ServeEngine:
         prefill_lanes: Optional[int] = None,
         token_budget: Optional[int] = None,
         admission: str = "reserve",
+        spec=None,
     ):
+        # spec: speculative decoding over the paged runtime — a
+        # repro.spec.SpecConfig, or a provider-name shorthand
+        # ("bitplane" | "layerskip" | "artifact" → defaults).  Drafts gamma
+        # tokens with the provider's cheap pass, verifies them in one
+        # batched full-precision step; greedy output is token-identical to
+        # non-speculative decoding.
         # da_mode: freeze float params through the DA artifact pipeline
         # ("auto" plans a backend per layer from measured + analytic costs;
         # a registered backend name pins every layer).  Params that already
@@ -308,14 +315,24 @@ class ServeEngine:
                            for p in range(cfg.period))
             runtime = "paged" if all_attn else "slots"
         self.runtime = runtime
+        if isinstance(spec, str):
+            from repro.spec import SpecConfig
+
+            spec = SpecConfig(provider=spec)
         if runtime == "paged":
             self._rt = PagedScheduler(
                 cfg, params, batch_size=batch_size, max_len=max_len,
                 greedy=greedy, page_size=page_size, n_pages=n_pages,
                 prefill_chunk=prefill_chunk, prefill_lanes=prefill_lanes,
-                token_budget=token_budget, admission=admission,
+                token_budget=token_budget, admission=admission, spec=spec,
             )
         elif runtime == "slots":
+            if spec is not None:
+                raise ValueError(
+                    "speculative decoding runs on the paged runtime only "
+                    "(draft rollback needs page tables); drop spec= or use "
+                    "runtime='paged'"
+                )
             self._rt = _SlotRuntime(cfg, params, batch_size, max_len, greedy)
         else:
             raise ValueError(f"unknown runtime {runtime!r} "

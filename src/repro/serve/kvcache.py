@@ -24,6 +24,7 @@ allocator and tables are host state owned by the scheduler.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
@@ -145,6 +146,65 @@ class PagePool:
             "alloc_count": self._allocs,
             "free_count": self._frees,
         }
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / rollback: undo speculative page growth without leaks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PageCheckpoint:
+    """Snapshot of one request's page-table length + the pool counters,
+    taken before a speculative (draft) allocation burst.
+
+    Rolling back frees exactly the pages allocated since the checkpoint —
+    pushed back onto the *head* of the free list in reverse allocation
+    order, so with no interleaved alloc/free the pool's free list, counters
+    and the page table end up bit-identical to never having speculated.
+    Stale KV written into the rolled-back pages needs no scrubbing: the
+    per-row position mask (``kpos <= tpos``) keeps unaccepted positions out
+    of every softmax, and any future owner overwrites a page's rows before
+    its positions become readable.
+    """
+
+    n_pages: int   # len(table) at checkpoint
+
+
+def checkpoint(pool: PagePool, table: Sequence[int]) -> PageCheckpoint:
+    """Snapshot ``table`` (one request's physical-page list) against ``pool``."""
+    del pool  # kept in the signature so the snapshot point is explicit
+    return PageCheckpoint(n_pages=len(table))
+
+
+def rollback(pool: PagePool, table: List[int], ckpt: PageCheckpoint,
+             keep: Optional[int] = None) -> List[int]:
+    """Release pages allocated after ``ckpt``, keeping the first ``keep``.
+
+    ``keep`` defaults to the checkpointed length (full rollback); a spec
+    round that accepted some tokens passes ``keep=pages_for(accepted_ctx)``
+    to retain the prefix that now holds verified KV.  Returns the freed
+    pages.  The free list is restored head-first in reverse allocation
+    order and the allocation counter is un-counted (a rolled-back draft was
+    never an allocation, not an alloc+free pair), so with no interleaved
+    activity a full rollback leaves the pool state bit-identical to the
+    checkpoint — the leak-proofness the rollback test asserts, including
+    across a later defrag.  Under interleaved allocations from other
+    requests the free-list *order* may differ, but membership and counters
+    stay exact.
+    """
+    keep = ckpt.n_pages if keep is None else max(keep, ckpt.n_pages)
+    if keep > len(table):
+        return []
+    dropped = table[keep:]
+    for p in dropped:  # validate BEFORE mutating: error → state untouched
+        if not 1 <= p < pool.n_pages:
+            raise ValueError(f"rolling back invalid page {p}")
+    del table[keep:]
+    for p in reversed(dropped):
+        pool._free.appendleft(p)
+    pool._allocs -= len(dropped)
+    return dropped
 
 
 # ---------------------------------------------------------------------------

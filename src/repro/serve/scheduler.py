@@ -49,12 +49,23 @@ from repro.models.model import forward
 from repro.serve.kvcache import (
     GARBAGE_PAGE,
     PagePool,
+    checkpoint as kv_checkpoint,
     defrag,
     init_paged_caches,
     pad_position,
     pages_for,
+    rollback as kv_rollback,
     table_width,
 )
+from repro.spec import (
+    SpecConfig,
+    breakeven_acceptance,
+    greedy_accept,
+    make_provider,
+    make_verify_step,
+)
+from repro.spec.decode import make_fused_draft, mk_positions  # noqa: F401
+# (mk_positions re-exported: serve.engine and the examples import it here)
 
 
 @dataclasses.dataclass
@@ -95,12 +106,6 @@ def latency_metrics(reqs) -> Dict[str, float]:
         "itl_p50_ms": pct(itl, 50),
         "itl_p99_ms": pct(itl, 99),
     }
-
-
-def mk_positions(cfg: ModelConfig, pos: jax.Array) -> jax.Array:
-    if cfg.mrope_sections:
-        return jnp.stack([pos, pos, pos], axis=-1)
-    return pos
 
 
 def pow2_bucket(n: int, lo: int = 1) -> int:
@@ -160,6 +165,9 @@ class _Lane:
     pos: int = 0                  # ctx tokens already written to the KV pool
     admitted_t: float = 0.0
     stalled_steps: int = 0
+    draft_pos: int = 0            # ctx tokens the DRAFT model has ingested
+    #                               (own-cache providers only; self-draft
+    #                               providers read the target's verified KV)
 
     @property
     def remaining(self) -> int:   # 1 → decoding; >1 → still prefilling
@@ -184,9 +192,16 @@ class PagedScheduler:
         token_budget: Optional[int] = None,
         admission: str = "reserve",
         stall_patience: int = 64,
+        spec: Optional[SpecConfig] = None,
     ):
         if admission not in ("reserve", "optimistic"):
             raise ValueError(f"unknown admission policy {admission!r}")
+        if spec is not None and not greedy:
+            raise ValueError(
+                "speculative decoding verifies drafts by greedy acceptance; "
+                "it requires greedy=True (sampling would need lossless "
+                "rejection sampling, which this runtime does not implement)"
+            )
         if n_pages is None:
             # dense-slot-equivalent footprint: every lane can hold max_len
             n_pages = batch_size * pages_for(max_len, page_size) + 1
@@ -225,6 +240,56 @@ class PagedScheduler:
             return base(*a)
 
         self._step = jax.jit(counted)
+
+        # -- speculative decoding (draft -> batched verify) -------------------
+        self.spec = spec
+        self._provider = None
+        self.draft_caches = None
+        self.draft_steps = self.verify_steps = 0
+        self.spec_rounds = self.drafted_tokens = self.accepted_drafts = 0
+        self.bonus_tokens = 0
+        self.spec_disabled = 0
+        self.draft_compiles = self.verify_compiles = 0
+        self._spec_state: Dict[int, Dict[str, Any]] = {}  # uid → EMA state
+        if spec is not None:
+            self._provider = make_provider(spec, cfg, params)
+            own = self._provider.init_caches(self.pool.n_pages, page_size)
+            if own is not None:
+                self.draft_caches = shard_paged_caches(own)
+            self._spec_floor = (
+                spec.disable_below if spec.disable_below is not None
+                else min(1.0, breakeven_acceptance(
+                    spec.gamma, self._provider.cost_ratio) + 0.05)
+            )
+            # the whole gamma-token draft loop is ONE device call: catch-up
+            # feed + a lax.scan of gamma-1 greedy proposals (host dispatch
+            # per round, not per draft token)
+            dbase = make_fused_draft(self._provider.make_step(),
+                                     self._provider.cfg, spec.gamma)
+
+            def counted_draft(*a):
+                self.draft_compiles += 1
+                return dbase(*a)
+
+            self._draft_step = jax.jit(counted_draft)
+            if not self._provider.shared_cache:
+                # chunked draft-side context ingestion (logits discarded) so
+                # long catch-ups ride prefill_chunk-bucketed shapes instead
+                # of a one-shot full-context fused call
+                ibase = self._provider.make_step()
+
+                def counted_ingest(*a):
+                    self.draft_compiles += 1
+                    return ibase(*a)
+
+                self._draft_ingest = jax.jit(counted_ingest)
+            vbase = make_verify_step(cfg)
+
+            def counted_verify(*a):
+                self.verify_compiles += 1
+                return vbase(*a)
+
+            self._verify_step = jax.jit(counted_verify)
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -348,7 +413,11 @@ class PagedScheduler:
         decode = [(i, l) for i, l in enumerate(self.lanes)
                   if l is not None and l.remaining == 1]
         if decode:
-            progressed |= self._decode_phase(decode)
+            staged, plain = self._partition_spec(decode)
+            if staged:
+                progressed |= self._spec_phase(staged)
+            if plain:
+                progressed |= self._decode_phase(plain)
 
         active = [(i, l) for i, l in enumerate(self.lanes) if l is not None]
         if active and not progressed:
@@ -459,6 +528,226 @@ class PagedScheduler:
             self._sample(i, l, logits[r], now)
         return {i for i, _ in live}
 
+    # -- speculative decoding ------------------------------------------------
+    def _fresh_spec_state(self) -> Dict[str, Any]:
+        return {"on": True, "ema": None, "rounds": 0}
+
+    def _partition_spec(self, decode):
+        """Split decode lanes into spec-staged and plain.
+
+        A lane speculates when its request's speculation is still on, it can
+        still emit ≥ 2 tokens (otherwise a round cannot beat one decode
+        step), the gamma+1 verify window stays inside the addressable page
+        table, and the extra pages stage in one shot — page shortage demotes
+        the lane to plain decode for this tick (the plain path owns the
+        preemption machinery).  Staging snapshots a page checkpoint FIRST so
+        the round's growth is fully attributable and rollback-exact.
+        """
+        if self.spec is None:
+            return [], decode
+        g = self.spec.gamma
+        addressable = (self.W - 1) * self.page_size
+        staged, plain = [], []
+        for i, l in sorted(decode, key=lambda t: t[1].admitted_t):
+            st = self._spec_state.setdefault(l.req.uid,
+                                             self._fresh_spec_state())
+            allowance = min(l.req.max_new_tokens - len(l.req.generated),
+                            self.max_len - len(l.ctx))
+            ok = (st["on"] and allowance >= 2
+                  and l.pos + g + 1 <= addressable)
+            if ok:
+                ck = kv_checkpoint(self.pool, l.pages)
+                need = pages_for(l.pos + g + 1, self.page_size) - len(l.pages)
+                if need > 0:
+                    got = self.pool.alloc(need)
+                    if got is None:
+                        ok = False
+                    else:
+                        l.pages.extend(got)
+                if ok:
+                    staged.append((i, l, ck))
+            if not ok:
+                plain.append((i, l))
+        return staged, plain
+
+    def _pack_rows(self, rows, toks, poss, n_rows: int, t_step: int):
+        """Assemble one fixed-shape batch from per-lane token/position lists
+        (pad rows/columns carry the garbage position, like _run_batch)."""
+        tokens = np.zeros((n_rows, t_step), np.int32)
+        positions = np.full((n_rows, t_step), self.pad_pos, np.int32)
+        last_idx = np.zeros((n_rows,), np.int32)
+        table = np.full((n_rows, self.W), GARBAGE_PAGE, np.int32)
+        for r, i, l in rows:
+            seq = toks[i]
+            n = len(seq)
+            tokens[r, :n] = seq
+            positions[r, :n] = poss[i]
+            last_idx[r] = n - 1
+            table[r, : len(l.pages)] = l.pages
+        return tokens, positions, last_idx, table
+
+    def _run_draft(self, rows, toks, poss, width: int,
+                   t_step: int) -> np.ndarray:
+        """One fused draft call → all gamma proposals [width, gamma]."""
+        tokens, positions, last_idx, table = self._pack_rows(
+            rows, toks, poss, width, t_step)
+        caches = (self.caches if self._provider.shared_cache
+                  else self.draft_caches)
+        drafts, new = self._draft_step(
+            self._provider.params, caches, jnp.asarray(tokens),
+            mk_positions(self._provider.cfg, jnp.asarray(positions)),
+            jnp.asarray(table), jnp.asarray(last_idx),
+        )
+        if self._provider.shared_cache:
+            self.caches = new
+        else:
+            self.draft_caches = new
+        self.draft_steps += self.spec.gamma
+        return np.asarray(drafts)
+
+    def _run_ingest(self, rows, toks, poss, width: int, t_step: int) -> None:
+        tokens, positions, last_idx, table = self._pack_rows(
+            rows, toks, poss, width, t_step)
+        _, self.draft_caches = self._draft_ingest(
+            self._provider.params, self.draft_caches, jnp.asarray(tokens),
+            mk_positions(self._provider.cfg, jnp.asarray(positions)),
+            jnp.asarray(table), jnp.asarray(last_idx),
+        )
+
+    def _draft_catch_up(self, rows) -> None:
+        """Own-cache providers only: chunked ingestion of the context the
+        draft model has not seen (first spec round after admission or
+        preemption).  Feeds prefill_chunk-bucketed slices through the draft
+        step — the target side deliberately chunks its prefill for the same
+        reason, and the fused draft call afterwards always runs at its
+        small warmed shapes, never a one-shot full-context feed."""
+        chunk = self.prefill_chunk
+        while True:
+            pend = [(i, l) for _, i, l in rows
+                    if l.pos - l.draft_pos >= chunk]
+            if not pend:
+                return
+            toks: Dict[int, List[int]] = {}
+            poss: Dict[int, List[int]] = {}
+            for i, l in pend:
+                n = min(chunk, l.pos - l.draft_pos)
+                toks[i] = list(l.ctx[l.draft_pos : l.draft_pos + n])
+                poss[i] = list(range(l.draft_pos, l.draft_pos + n))
+            t = min(pow2_bucket(max(len(x) for x in toks.values())), chunk)
+            sub = [(r, i, l) for r, (i, l) in enumerate(pend)]
+            self._run_ingest(sub, toks, poss,
+                             width_bucket(len(pend), self.b), t)
+            for i, l in pend:
+                l.draft_pos += len(toks[i])
+
+    def _run_verify(self, rows, toks, poss, width: int,
+                    t_step: int) -> np.ndarray:
+        tokens, positions, _, table = self._pack_rows(
+            rows, toks, poss, width, t_step)
+        logits, self.caches = self._verify_step(
+            self.params, self.caches, jnp.asarray(tokens),
+            mk_positions(self.cfg, jnp.asarray(positions)),
+            jnp.asarray(table),
+        )
+        self.verify_steps += 1
+        return np.asarray(logits)  # [width, t_step, V]
+
+    def _spec_phase(self, staged) -> set:
+        """One speculative round for the staged lanes: gamma batched draft
+        steps (the first coalesces any draft-side catch-up), ONE batched
+        full-precision verify over the gamma+1 window, greedy acceptance,
+        then page rollback so rejected drafts leave no trace."""
+        g = self.spec.gamma
+        rows = [(r, i, l) for r, (i, l, _) in enumerate(staged)]
+        ckpts = {i: ck for i, _, ck in staged}
+        width = width_bucket(len(rows), self.b)
+        shared = self._provider.shared_cache
+        toks: Dict[int, List[int]] = {}
+        poss: Dict[int, List[int]] = {}
+        drafts: Dict[int, List[int]] = {}
+        start_pos: Dict[int, int] = {}
+        # one fused draft call: catch-up feed (own-cache providers ingest
+        # what the target accepted since their last round; anything longer
+        # than a prefill chunk was pre-ingested in bucketed slices) + gamma
+        # greedy proposals scanned on-device
+        if not shared:
+            self._draft_catch_up(rows)
+        for _, i, l in rows:
+            start_pos[i] = l.pos
+            s = l.pos if shared else min(l.draft_pos, l.pos)
+            toks[i] = list(l.ctx[s : l.pos + 1])
+            poss[i] = list(range(s, l.pos + 1))
+        t1 = min(pow2_bucket(max(len(t) for t in toks.values())),
+                 max(self.prefill_chunk, 1))
+        dmat = self._run_draft(rows, toks, poss, width, t1)
+        for r, i, _ in rows:
+            drafts[i] = [int(t) for t in dmat[r]]
+        # one batched verify over [x_t, d_1..d_g] — full precision, logits
+        # at every position, exact KV overwrites the draft-quality rows
+        for _, i, l in rows:
+            toks[i] = [l.ctx[start_pos[i]]] + drafts[i]
+            poss[i] = list(range(start_pos[i], start_pos[i] + g + 1))
+        vlogits = self._run_verify(rows, toks, poss, width,
+                                   pow2_bucket(g + 1))
+        now = time.perf_counter()
+        out = set()
+        for r, i, l in rows:
+            verify = [int(np.argmax(vlogits[r, j])) for j in range(g + 1)]
+            m = greedy_accept(drafts[i], verify)
+            emitted = self._accept_tokens(i, l, verify[:m], now)
+            l.pos = start_pos[i] + emitted
+            # own-cache draft KV is valid for the matched prefix only
+            l.draft_pos = min(start_pos[i] + g, l.pos)
+            self.ctx_tokens += emitted
+            self.spec_rounds += 1
+            self.drafted_tokens += g
+            self.accepted_drafts += m - 1
+            if m == g + 1:
+                self.bonus_tokens += 1
+            self._update_spec_state(l.req.uid, (m - 1) / g)
+            if self.lanes[i] is l:  # still running: release rejected pages
+                kv_rollback(self.pool, l.pages, ckpts[i],
+                            keep=pages_for(l.pos, self.page_size))
+            out.add(i)
+        return out
+
+    def _accept_tokens(self, i: int, lane: _Lane, tokens, now: float) -> int:
+        """Emit verified tokens in order (stream callbacks, timing, finish
+        checks); returns how many were emitted before a finish condition."""
+        req = lane.req
+        emitted = 0
+        for tok in tokens:
+            if not req.generated:
+                req.first_token_t = now
+            req.token_times.append(now)
+            req.generated.append(tok)
+            lane.ctx.append(tok)
+            emitted += 1
+            self.out_tokens += 1
+            if req.on_token is not None:
+                req.on_token(req.uid, tok)
+            if (tok == req.eos_id
+                    or len(req.generated) >= req.max_new_tokens
+                    or len(lane.ctx) >= self.max_len):
+                req.finish_t = now
+                self.pool.free(lane.pages)
+                self.done[req.uid] = req
+                self.lanes[i] = None
+                break
+        return emitted
+
+    def _update_spec_state(self, uid: int, rate: float) -> None:
+        """Per-request acceptance EMA; below-breakeven requests stop
+        speculating (draft effort would cost more than it saves)."""
+        st = self._spec_state[uid]
+        a = self.spec.ema_alpha
+        st["ema"] = rate if st["ema"] is None else a * rate + (1 - a) * st["ema"]
+        st["rounds"] += 1
+        if (st["on"] and st["rounds"] >= self.spec.warmup_rounds
+                and st["ema"] < self._spec_floor):
+            st["on"] = False
+            self.spec_disabled += 1
+
     def _sample(self, i: int, lane: _Lane, row: np.ndarray, now: float) -> None:
         req = lane.req
         if self.greedy:
@@ -512,17 +801,74 @@ class PagedScheduler:
                 self.params, self.caches, tokens,
                 mk_positions(self.cfg, positions), table, last_idx,
             )
-        return len(shapes)
+        n_spec = 0
+        if self.spec is not None:
+            # draft [w, 1] + verify [w, pow2(gamma+1)] per decode width
+            tv = pow2_bucket(self.spec.gamma + 1)
+            for bw in width_buckets(self.b):
+                table = jnp.full((bw, self.W), GARBAGE_PAGE, dtype=jnp.int32)
+                dcaches = (self.caches if self._provider.shared_cache
+                           else self.draft_caches)
+                _, new = self._draft_step(
+                    self._provider.params, dcaches,
+                    jnp.zeros((bw, 1), jnp.int32),
+                    mk_positions(self._provider.cfg,
+                                 jnp.full((bw, 1), self.pad_pos, jnp.int32)),
+                    table, jnp.zeros((bw,), jnp.int32),
+                )
+                if self._provider.shared_cache:
+                    self.caches = new
+                else:
+                    self.draft_caches = new
+                _, self.caches = self._verify_step(
+                    self.params, self.caches,
+                    jnp.zeros((bw, tv), jnp.int32),
+                    mk_positions(self.cfg,
+                                 jnp.full((bw, tv), self.pad_pos, jnp.int32)),
+                    table,
+                )
+                n_spec += 2
+        return len(shapes) + n_spec
 
     # -- maintenance / observability -----------------------------------------
     def defrag(self) -> None:
         """Compact live pages to the pool's low-index prefix (the page tables
-        move with them; decode output is unchanged)."""
+        move with them; decode output is unchanged).  An own-cache draft
+        provider's pools are indexed by the SAME page tables, so they must
+        move under the same remap — both trees ride one defrag call (the
+        tables and pool free list are rewritten exactly once)."""
         tables = [l.pages for l in self.lanes if l is not None]
-        self.caches = defrag(self.caches, self.pool, tables)
+        if self.draft_caches is not None:
+            both = defrag({"target": self.caches, "draft": self.draft_caches},
+                          self.pool, tables)
+            self.caches, self.draft_caches = both["target"], both["draft"]
+        else:
+            self.caches = defrag(self.caches, self.pool, tables)
 
     def metrics(self) -> Dict[str, Any]:
         wall = (time.perf_counter() - self._start_t) if self._start_t else 0.0
+        spec = None
+        if self.spec is not None:
+            drafted = self.drafted_tokens
+            spec = {
+                "provider": self._provider.name,
+                "gamma": self.spec.gamma,
+                "cost_ratio": round(self._provider.cost_ratio, 4),
+                "rounds": self.spec_rounds,
+                "draft_steps": self.draft_steps,
+                "verify_steps": self.verify_steps,
+                "drafted_tokens": drafted,
+                "accepted_drafts": self.accepted_drafts,
+                "acceptance_rate": (self.accepted_drafts / drafted
+                                    if drafted else 0.0),
+                "bonus_tokens": self.bonus_tokens,
+                "draft_compiles": self.draft_compiles,
+                "verify_compiles": self.verify_compiles,
+                "disable_floor": round(self._spec_floor, 4),
+                "disabled_requests": self.spec_disabled,
+                "enabled_requests": sum(
+                    1 for s in self._spec_state.values() if s["on"]),
+            }
         return {
             "runtime": "paged",
             "requests_done": len(self.done),
@@ -534,5 +880,6 @@ class PagedScheduler:
             "wall_s": wall,
             "tokens_per_s": self.out_tokens / wall if wall > 0 else 0.0,
             "pool": self.pool.stats(),
+            "spec": spec,
             **latency_metrics(self.done.values()),
         }

@@ -1,0 +1,37 @@
+"""Speculative decoding over the paged serving runtime (DA-native drafts).
+
+The paper's DA formulation is bit-serial: the VMM is a shift-and-add over
+per-bit partial products, so truncating low-order input bit-planes yields a
+cheap approximate forward pass from the *same* stored weight-sums — no
+second model, no extra weight memory.  This package turns that structural
+property into decode throughput: draft ``gamma`` tokens with a cheap pass,
+verify them in ONE batched full-precision step through the paged runtime,
+and keep the verified prefix (greedy acceptance makes the output
+token-identical to non-speculative decoding).
+
+Three draft providers behind one :class:`DraftProvider` protocol:
+
+* ``bitplane``  — truncated-bitplane self-draft: the same frozen artifact
+  evaluated at ``x_bits_eff`` of its ``x_bits`` bit-planes.
+* ``layerskip`` — early-exit self-draft over the first ``draft_periods``
+  period groups of the same weights.
+* ``artifact``  — a second, smaller frozen ``DAArtifact`` sharing the
+  vocabulary.
+
+The scheduler side (draft/verify batching, acceptance EMA, auto-disable,
+page checkpoint/rollback) lives in :mod:`repro.serve.scheduler`; this
+package owns the draft/verify step builders and the acceptance math.
+"""
+from repro.spec.decode import (  # noqa: F401
+    SpecConfig,
+    breakeven_acceptance,
+    greedy_accept,
+    make_verify_step,
+)
+from repro.spec.providers import (  # noqa: F401
+    ArtifactDraft,
+    DraftProvider,
+    LayerSkipDraft,
+    TruncatedBitplaneDraft,
+    make_provider,
+)

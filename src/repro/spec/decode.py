@@ -1,0 +1,180 @@
+"""Speculative-decoding config, acceptance math, and the verify step.
+
+The cost model (README §Speculative decoding): one spec round spends
+``gamma`` draft steps at relative cost ``c`` (the provider's
+``cost_ratio``) plus one full-precision verify step over ``gamma + 1``
+positions — and a decode-shaped verify step is weight-read bound, so it
+costs about one ordinary decode step.  A round yields ``m`` tokens
+(``1 ≤ m ≤ gamma + 1``), so::
+
+    speedup ≈ E[m] / (gamma · c + 1)        with E[m] ≈ 1 + r · gamma
+
+for per-draft acceptance rate ``r``.  Breakeven is therefore ``r* ≈ c``:
+speculation pays exactly when drafts are accepted more often than they are
+discounted.  The scheduler tracks a per-request EMA of ``r`` and disables
+speculation for requests that fall below ``disable_below`` (default ``c``
+plus a small margin) — heterogeneous traffic keeps the win where it exists
+without taxing requests that draft poorly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import forward
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs for the paged scheduler.
+
+    provider:       ``bitplane`` | ``layerskip`` | ``artifact``.
+    gamma:          draft tokens per round (the verify window is gamma+1).
+    draft_x_bits:   bit-planes the bitplane self-draft evaluates.
+    draft_periods:  period groups the layerskip draft runs (None → half).
+    draft_artifact: directory of a frozen draft DAArtifact (``artifact``).
+    draft_params / draft_model_cfg: in-memory draft model (tests / embedders
+                    that already hold the artifact; wins over the directory).
+    ema_alpha:      weight of the newest round in the acceptance-rate EMA.
+    disable_below:  acceptance-rate floor; None → provider breakeven + 0.05.
+    warmup_rounds:  rounds before the floor can disable a request.
+    """
+
+    provider: str = "bitplane"
+    gamma: int = 4
+    draft_x_bits: int = 4
+    draft_periods: Optional[int] = None
+    draft_artifact: Optional[str] = None
+    draft_params: Any = None
+    draft_model_cfg: Any = None
+    ema_alpha: float = 0.25
+    disable_below: Optional[float] = None
+    warmup_rounds: int = 3
+
+    def __post_init__(self):
+        if self.gamma < 1:
+            raise ValueError(f"gamma={self.gamma} must be >= 1")
+        if not 0.0 < self.ema_alpha <= 1.0:
+            raise ValueError(f"ema_alpha={self.ema_alpha} outside (0, 1]")
+
+
+def greedy_accept(draft: Sequence[int], verify: Sequence[int]) -> int:
+    """Greedy acceptance: how many verify tokens survive.
+
+    ``verify`` holds the full model's gamma+1 greedy tokens (position ``i``
+    of the verify window predicts token ``i+1``); ``draft`` holds the gamma
+    draft tokens.  ``verify[i]`` is only meaningful while every earlier
+    draft matched (the prefix it conditions on is then the real context),
+    so the accepted run is the matched draft prefix plus one more full-model
+    token — the correction where the draft diverged, or the bonus token when
+    all gamma drafts survive.  Returns ``m`` in ``[1, gamma + 1]``; the
+    accepted tokens are ``verify[:m]`` and every one of them is exactly what
+    non-speculative greedy decoding would have emitted.
+    """
+    if len(verify) != len(draft) + 1:
+        raise ValueError(
+            f"verify window of {len(verify)} tokens does not cover "
+            f"{len(draft)} drafts + 1"
+        )
+    m = 1
+    for d, y in zip(draft, verify):
+        if int(d) != int(y):
+            break
+        m += 1
+    return m
+
+
+def breakeven_acceptance(gamma: int, cost_ratio: float) -> float:
+    """Per-draft acceptance rate below which a round loses throughput.
+
+    From ``E[m] ≈ 1 + r·gamma`` and round cost ``gamma·c + 1`` (verify is
+    weight-read bound — one decode step), speedup > 1 iff ``r > c``.  The
+    gamma argument is kept for callers estimating with the geometric
+    ``E[m] = (1 - r^{gamma+1}) / (1 - r)`` instead; the linear form is the
+    conservative bound the scheduler's auto-disable uses.
+    """
+    del gamma
+    return min(1.0, max(0.0, cost_ratio))
+
+
+def mk_positions(cfg: ModelConfig, pos: jax.Array) -> jax.Array:
+    """Shape positions for the model: [B, T] → [B, T, 3] under M-RoPE.
+
+    The single implementation — the serving scheduler re-exports it (this
+    package sits below the scheduler in the import graph), and it traces
+    cleanly inside jit (the fused draft scan increments positions on
+    device)."""
+    if cfg.mrope_sections:
+        return jnp.stack([pos, pos, pos], axis=-1)
+    return pos
+
+
+def make_fused_draft(step_fn, cfg: ModelConfig, gamma: int):
+    """Fuse the whole gamma-token autoregressive draft loop into ONE device
+    call: (params, caches, tokens [B,T], positions, page_table, last_idx) →
+    (drafts [B, gamma] int32, caches).
+
+    The first feed is the catch-up chunk (T ≥ 1: the last accepted token,
+    plus — for own-cache providers — whatever the target accepted since the
+    draft last ran); the remaining gamma−1 proposals run as a
+    ``lax.scan`` with on-device greedy argmax, so a draft round costs one
+    host dispatch instead of gamma (the host loop is pure overhead in the
+    decode hot path).  Greedy ties break identically on device and host
+    (first max index), which token-identity relies on.
+
+    Pad rows ride along writing into the garbage column: their positions
+    keep incrementing past it, where table lookups clamp to the garbage
+    column and scatter drops out-of-range rows — masked out of every real
+    row's softmax either way.
+    """
+
+    def fused(params, caches, tokens, positions, page_table, last_idx):
+        logits, caches = step_fn(params, caches, tokens, positions,
+                                 page_table, last_idx)
+        d0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # [B]
+        tpos = positions[..., 0] if positions.ndim == 3 else positions
+        nxt = jnp.take_along_axis(tpos, last_idx[:, None], axis=1)[:, 0] + 1
+        if gamma == 1:
+            return d0[:, None], caches
+
+        def body(carry, _):
+            caches, tok, pos = carry
+            lg, caches = step_fn(params, caches, tok[:, None],
+                                 mk_positions(cfg, pos[:, None]),
+                                 page_table, jnp.zeros_like(last_idx))
+            d = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            return (caches, d, pos + 1), d
+
+        (caches, _, _), rest = jax.lax.scan(
+            body, (caches, d0, nxt.astype(jnp.int32)), None, length=gamma - 1
+        )
+        drafts = jnp.concatenate([d0[:, None], rest.T], axis=1)  # [B, gamma]
+        return drafts, caches
+
+    return fused
+
+
+def make_verify_step(cfg: ModelConfig):
+    """The full-precision verify step: (params, caches, tokens [B,T],
+    positions, page_table) → (logits [B,T,V], caches).
+
+    Unlike the serve step this keeps the logits of EVERY position — the
+    gamma+1 verify window needs the full model's next-token argmax after
+    each draft prefix.  KV for all fed positions is written at full
+    precision (overwriting the draft-quality rows the draft pass left), so
+    the accepted prefix needs no recompute and the rejected suffix is dead
+    weight the page rollback releases.
+    """
+
+    def verify(params, caches, tokens, positions, page_table):
+        logits, caches = forward(
+            params, tokens, cfg, positions=positions, caches=caches,
+            update_cache=True, page_table=page_table,
+        )
+        return logits, caches
+
+    return verify

@@ -86,6 +86,34 @@ def test_auto_fallback_when_bucket_unmeasured():
     assert with_table == without
 
 
+def test_bucket_miss_warns_once_per_bucket_and_backend():
+    """A tuned cache that misses the dispatched bucket warns ONCE per
+    (bucket, fallback backend) — a decode loop hits the same bucket every
+    token and must not spam — while a wholly absent cache stays silent."""
+    import warnings as _warnings
+
+    cfg = DAConfig(x_signed=True)
+    other = shape_bucket(512, 2048, 2048, cfg.x_bits)
+    set_cost_table({other: {"bitplane": 1.0}})
+    with pytest.warns(UserWarning, match="no timings"):
+        first = select_backend(4, 64, 128, cfg, has_luts=True)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")  # any repeat warning would raise
+        assert select_backend(4, 64, 128, cfg, has_luts=True) == first
+        # a different bucket gets its own single warning
+        with pytest.warns(UserWarning, match="no timings"):
+            select_backend(300, 64, 128, cfg, has_luts=True)
+    # installing a fresh table resets the dedup set
+    set_cost_table({other: {"bitplane": 1.0}})
+    with pytest.warns(UserWarning, match="no timings"):
+        select_backend(4, 64, 128, cfg, has_luts=True)
+    # no cache at all → heuristic silently (the engine never requires tuning)
+    set_cost_table({})
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        select_backend(4, 64, 128, cfg, has_luts=True)
+
+
 def test_cost_table_loads_from_json(tmp_path):
     """The autotune JSON cache round-trips through the loader; junk entries
     (unknown backends, malformed costs) are dropped, not fatal."""

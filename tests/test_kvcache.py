@@ -1,5 +1,6 @@
 """Paged KV cache unit tests: page math, the host-side pool allocator,
-page-table materialization, and defrag (compaction moves pages, never
+page-table materialization, speculative checkpoint/rollback (rejected
+drafts leave no trace), and defrag (compaction moves pages, never
 meaning)."""
 import jax.numpy as jnp
 import numpy as np
@@ -9,9 +10,11 @@ from repro.serve.kvcache import (
     GARBAGE_PAGE,
     PagedKVCache,
     PagePool,
+    checkpoint,
     defrag,
     pad_position,
     pages_for,
+    rollback,
     table_array,
     table_width,
 )
@@ -66,6 +69,120 @@ def test_table_array():
     with pytest.raises(ValueError):
         # the garbage column may never be claimed by real pages
         table_array([[1, 2, 3, 4]], width=4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / rollback: speculative page growth must be fully revocable
+# ---------------------------------------------------------------------------
+def _pool_state(pool: PagePool):
+    """Complete observable allocator state (free-list ORDER included)."""
+    return (list(pool._free), pool.stats())
+
+
+def test_rollback_restores_pool_and_table_bit_identical():
+    """checkpoint → allocate draft pages (+ writes) → reject all → state
+    bit-identical to never having speculated: same table, same free-list
+    order, same counters."""
+    pool = PagePool(10)
+    table = pool.alloc(2)          # the lane's pre-spec pages
+    before = (_pool_state(pool), list(table))
+    ck = checkpoint(pool, table)
+    table.extend(pool.alloc(3))    # gamma draft tokens grow 3 pages
+    assert len(table) == 5
+    freed = rollback(pool, table, ck)
+    assert len(freed) == 3
+    assert (_pool_state(pool), list(table)) == before
+    # idempotent: rolling back again is a no-op
+    assert rollback(pool, table, ck) == []
+    assert (_pool_state(pool), list(table)) == before
+    # and the next allocation hands out the same pages in the same order
+    assert pool.alloc(3) == freed
+
+
+def test_rollback_partial_keep_retains_accepted_prefix():
+    """A round that accepted some tokens keeps the prefix covering them;
+    only the rejected suffix returns to the pool (head-first)."""
+    pool = PagePool(10)
+    table = pool.alloc(1)
+    base = list(table)
+    ck = checkpoint(pool, table)
+    grown = pool.alloc(4)
+    table.extend(grown)
+    freed = rollback(pool, table, ck, keep=3)  # accepted ctx needs 3 pages
+    assert freed == grown[2:]
+    assert table == base + grown[:2]
+    assert pool.stats()["alloc_count"] == 3  # rejected allocs un-counted
+    # keep below the checkpoint never shrinks pre-spec pages
+    assert rollback(pool, table, ck, keep=0) == grown[:2]
+    assert len(table) == 1
+
+
+def test_rollback_invalid_page_leaves_state_untouched():
+    """An invalid id in the rolled-back suffix must error BEFORE any
+    mutation — a half-rolled-back pool would defeat the function's whole
+    guarantee."""
+    pool = PagePool(8)
+    table = pool.alloc(2)
+    ck = checkpoint(pool, table)
+    table.extend(pool.alloc(1))
+    table.append(0)  # corrupt suffix: the garbage page is never allocatable
+    before = (list(pool._free), pool.stats(), list(table))
+    with pytest.raises(ValueError):
+        rollback(pool, table, ck)
+    assert (list(pool._free), pool.stats(), list(table)) == before
+
+
+def test_rollback_state_identical_across_defrag():
+    """The leak-proofness bar: a checkpoint→write→reject cycle followed by a
+    defrag pass ends bit-identical (pool, tables, live cache content) to a
+    timeline where the speculation never happened."""
+    n_pages, ps = 12, 4
+
+    def fragmented():
+        pool = PagePool(n_pages)
+        t0, t1 = pool.alloc(3), pool.alloc(2)
+        pool.free([t0.pop(1)])     # punch a hole: pages {1,3} + {4,5} live
+        caches = {"pos_0": _pool_leaves(n_pages, ps, stacked=False)}
+        return pool, [t0, t1], caches
+
+    # timeline A: speculation on lane 0, fully rejected
+    pool_a, tables_a, caches_a = fragmented()
+    ck = checkpoint(pool_a, tables_a[0])
+    tables_a[0].extend(pool_a.alloc(3))     # draft writes land here
+    caches_a["pos_0"] = PagedKVCache(       # scribble into the draft pages
+        k=caches_a["pos_0"].k.at[tables_a[0][-1]].add(99.0),
+        v=caches_a["pos_0"].v,
+    )
+    rollback(pool_a, tables_a[0], ck)
+    # timeline B: no speculation ever
+    pool_b, tables_b, caches_b = fragmented()
+
+    assert _pool_state(pool_a) == _pool_state(pool_b)
+    assert tables_a == tables_b
+    caches_a = defrag(caches_a, pool_a, tables_a)
+    caches_b = defrag(caches_b, pool_b, tables_b)
+    assert _pool_state(pool_a) == _pool_state(pool_b)
+    assert tables_a == tables_b
+    for ta, tb in zip(tables_a, tables_b):
+        ga = np.asarray(jnp.take(caches_a["pos_0"].k, jnp.asarray(ta), axis=0))
+        gb = np.asarray(jnp.take(caches_b["pos_0"].k, jnp.asarray(tb), axis=0))
+        np.testing.assert_array_equal(ga, gb)
+
+
+def test_rollback_interleaved_allocations_keep_membership_exact():
+    """Under interleaved allocs from other lanes, rollback still frees
+    exactly the rejected pages (no leak, no double-free), even though the
+    free-list order may legitimately differ."""
+    pool = PagePool(12)
+    lane_a, lane_b = pool.alloc(2), pool.alloc(2)
+    ck_a = checkpoint(pool, lane_a)
+    lane_a.extend(pool.alloc(2))
+    lane_b.extend(pool.alloc(2))   # interleaved growth of another lane
+    rollback(pool, lane_a, ck_a)
+    assert len(lane_a) == 2
+    live = set(lane_a) | set(lane_b)
+    assert set(pool._free) == set(range(1, 12)) - live
+    assert len(pool._free) + len(live) == 11
 
 
 def _pool_leaves(n_pages, ps, stacked: bool):
