@@ -1,0 +1,198 @@
+"""Shared-prefix caching benchmark: TTFT and pages-in-use on a
+shared-system-prompt workload, prefix cache off vs on.
+
+    PYTHONPATH=src python benchmarks/prefix_cache.py           # full
+    PYTHONPATH=src python benchmarks/prefix_cache.py --quick   # CI-sized
+
+Writes ``artifacts/BENCH_prefix_cache.json`` (override with ``--out``).
+
+The workload is the ROADMAP's "millions of users" scenario in miniature:
+every request opens with the same system prompt (several KV pages worth)
+followed by a short unique tail.  One priming request carries the system
+prompt through first (run identically in both configurations), then the
+measured fleet arrives at once.  Without caching the runtime re-prefills
+the identical prefix once per request and the pool holds one private copy
+per concurrent lane; with caching the prefix is computed once, every fleet
+request's prefill shrinks to its tail, and all lanes share one physical copy
+of the prefix pages.  Reported per configuration:
+
+* ``ttft_p50_ms`` / ``ttft_p95_ms`` — time to first token (the metric
+  prefix caching exists to cut: admission-to-first-sample includes the
+  prefill the cache skips).
+* ``peak_pages`` — high-water pool occupancy over the run (the page-budget
+  saving: shared prefixes are resident once, not once per lane).
+* ``cached_tokens`` / ``hit_rate`` — how much prefill the trie absorbed.
+
+Decoded tokens are asserted identical between the two configurations (the
+cache is an optimization, never a behavior change); engines are warmed
+before the measured window.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+try:  # run as `python benchmarks/prefix_cache.py` (script dir on path)
+    from stamp import bench_stamp
+except ImportError:  # imported as a module from the repo root
+    from benchmarks.stamp import bench_stamp
+
+from repro.configs.registry import ARCHS
+from repro.core.da import DAConfig
+from repro.core.freeze import freeze_model
+from repro.models.model import init_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def build_cfg():
+    # same runtime-sized model as benchmarks/serve_throughput.py: this
+    # instruments scheduling + paging, not BLAS time
+    return dataclasses.replace(
+        ARCHS["qwen3-8b"],
+        name="qwen3-serve-bench",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab=4000,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+        moe_dropless=True,
+    )
+
+
+def workload(cfg, n_requests, sys_len, tail, max_new, base_uid=0):
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab, sys_len)
+    prime = Request(uid=base_uid + 50_000,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(0, cfg.vocab, tail)]),
+                    max_new_tokens=2)
+    fleet = [
+        Request(uid=base_uid + u,
+                prompt=np.concatenate(
+                    [shared, rng.integers(0, cfg.vocab, tail)]),
+                max_new_tokens=max_new)
+        for u in range(n_requests)
+    ]
+    return prime, fleet
+
+
+def run_once(cfg, frozen, prime, reqs, prefix_cache, batch, max_len,
+             page_size):
+    eng = ServeEngine(cfg, frozen, batch_size=batch, max_len=max_len,
+                      runtime="paged", page_size=page_size,
+                      prefix_cache=prefix_cache)
+    eng.warmup()
+    # warm the host loop too (uids far from the measured workload; a fresh
+    # engine per configuration keeps the trie cold for the measured window)
+    rng = np.random.default_rng(9)
+    for w in range(2):
+        eng.submit(Request(uid=10_000 + w,
+                           prompt=rng.integers(0, cfg.vocab, 6),
+                           max_new_tokens=2))
+    eng.run()
+    # prime: ONE request carries the system prompt through first (its pages
+    # land in the trie when caching is on) — run identically in both
+    # configurations so the measured fleet is compared apples to apples
+    eng.submit(prime)
+    eng.run()
+    ctx0 = eng.metrics()["ctx_tokens"]
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    peak_pages = 0
+    while eng.step() or eng.queue:
+        peak_pages = max(peak_pages, eng._rt.pool.used_pages)
+    wall = time.perf_counter() - t0
+    done = eng.done
+    ttft = [(done[r.uid].first_token_t - done[r.uid].submit_t) * 1e3
+            for r in reqs]
+    m = eng.metrics()
+    out = {
+        "prefix_cache": prefix_cache,
+        "requests": len(reqs),
+        "wall_s": round(wall, 3),
+        "out_tokens": sum(len(done[r.uid].generated) for r in reqs),
+        "tokens_per_s": round(
+            sum(len(done[r.uid].generated) for r in reqs) / wall, 2),
+        "ttft_p50_ms": round(float(np.percentile(ttft, 50)), 3),
+        "ttft_p95_ms": round(float(np.percentile(ttft, 95)), 3),
+        "peak_pages": peak_pages,
+        "ctx_tokens": m["ctx_tokens"] - ctx0,  # model-visible tokens, fleet only
+    }
+    if m["prefix_cache"] is not None:
+        out["cached_tokens"] = m["prefix_cache"]["cached_tokens"]
+        out["hit_rate"] = round(m["prefix_cache"]["hit_rate"], 4)
+        out["cow_copies"] = m["prefix_cache"]["cow_copies"]
+        out["evictions"] = m["prefix_cache"]["evictions"]
+    tokens = {r.uid: list(done[r.uid].generated) for r in reqs}
+    return out, tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default="artifacts/BENCH_prefix_cache.json")
+    args = ap.parse_args()
+
+    cfg = build_cfg()
+    params = init_model(jax.random.key(0), cfg)
+    art = freeze_model(params, DAConfig(x_signed=True), mode="auto",
+                       m_hint=8, model_cfg=cfg, pin_modes=False)
+    del params
+
+    n_requests = 8 if args.quick else 24
+    sys_len, tail = (48, 8)          # 3 shared pages + a unique tail
+    max_new = 4 if args.quick else 16
+    batch, max_len, page_size = 8, 128, 16
+
+    results = {}
+    tokens = {}
+    for pc in (False, True):
+        key = "on" if pc else "off"
+        prime, fleet = workload(cfg, n_requests, sys_len, tail, max_new)
+        results[key], tokens[key] = run_once(
+            cfg, art.params, prime, fleet, pc, batch, max_len, page_size)
+        print(f"prefix_cache={key}: {results[key]}")
+    assert tokens["on"] == tokens["off"], \
+        "prefix caching changed decoded tokens — correctness bug"
+
+    result = {
+        "bench": "prefix_cache",
+        **bench_stamp(seed=3),
+        "model": cfg.name,
+        "da_mode": "auto",
+        "quick": args.quick,
+        "workload": {"requests": n_requests, "system_prompt_tokens": sys_len,
+                     "tail_tokens": tail, "max_new": max_new, "batch": batch,
+                     "page_size": page_size},
+        "off": results["off"],
+        "on": results["on"],
+        "ttft_p50_speedup": round(
+            results["off"]["ttft_p50_ms"]
+            / max(results["on"]["ttft_p50_ms"], 1e-9), 2),
+        "peak_pages_saved": (results["off"]["peak_pages"]
+                             - results["on"]["peak_pages"]),
+        "tokens_identical": True,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"ttft_p50 speedup: {result['ttft_p50_speedup']}x, "
+          f"peak pages saved: {result['peak_pages_saved']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

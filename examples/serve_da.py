@@ -79,6 +79,10 @@ def main():
                          "batching for attention stacks)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size (tokens) for the paged runtime")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix caching: requests sharing a prompt "
+                         "prefix (the demo gives every request one) reuse "
+                         "its KV pages instead of re-prefilling them")
     ap.add_argument("--spec", default=None,
                     choices=["bitplane", "layerskip"],
                     help="self-speculative decoding: draft with a truncated-"
@@ -110,7 +114,8 @@ def main():
     if args.artifact:
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
                                         max_len=96, runtime=args.runtime,
-                                        page_size=args.page_size, spec=spec)
+                                        page_size=args.page_size, spec=spec,
+                                        prefix_cache=args.prefix_cache)
         cfg = eng.cfg
         print(f"cold boot from {args.artifact} in "
               f"{time.perf_counter()-t0:.1f}s (zero float weights, "
@@ -124,7 +129,7 @@ def main():
         eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=96,
                           da_mode=args.mode,  # per-layer planned freeze
                           runtime=args.runtime, page_size=args.page_size,
-                          spec=spec)
+                          spec=spec, prefix_cache=args.prefix_cache)
         if args.mode != "float":
             print(f"pre-VMM freeze ({args.mode}) in "
                   f"{time.perf_counter()-t0:.1f}s:")
@@ -134,11 +139,15 @@ def main():
             print(f"artifact persisted to {path} — re-serve with "
                   f"--artifact {path}")
     rng = np.random.default_rng(0)
+    # a shared "system prompt" prefix gives --prefix-cache its workload; off
+    # the flag, requests stay fully independent (the PR-3/4 demo shape)
+    shared = rng.integers(0, cfg.vocab, 32 if args.prefix_cache else 0)
     t0 = time.perf_counter()
     for uid in range(args.requests):
         eng.submit(Request(
             uid=uid,
-            prompt=rng.integers(0, cfg.vocab, rng.integers(4, 24)),
+            prompt=np.concatenate(
+                [shared, rng.integers(0, cfg.vocab, rng.integers(4, 24))]),
             max_new_tokens=int(rng.integers(8, 24)),
         ))
     done = eng.run()
@@ -153,6 +162,12 @@ def main():
               f"acceptance={sm['acceptance_rate']:.2f} "
               f"rounds={sm['rounds']} bonus={sm['bonus_tokens']} "
               f"disabled={sm['disabled_requests']}")
+    pm = eng.metrics().get("prefix_cache")
+    if pm:
+        print(f"prefix-cache: hit_rate={pm['hit_rate']:.2f} "
+              f"cached_tokens={pm['cached_tokens']} hits={pm['hits']}/"
+              f"{pm['lookups']} cow={pm['cow_copies']} "
+              f"evictions={pm['evictions']}")
     for uid in sorted(done)[:4]:
         print(f"  req {uid}: {len(done[uid].generated)} tokens -> "
               f"{done[uid].generated[:8]}...")

@@ -7,6 +7,10 @@ Freeze-once, serve-many: ``--quant da8-plan --save-artifact DIR`` persists
 the planned DA artifact; a later ``--artifact DIR`` boots straight from disk
 (no --arch, no float init, no re-packing).
 
+Shared-prefix caching (paged runtime): ``--prefix-cache`` reuses the KV
+pages of shared prompt prefixes across requests (refcounted pages,
+copy-on-write on the last partial page; tokens identical to caching off).
+
 Speculative decoding (paged runtime): ``--spec bitplane`` drafts with a
 truncated-bitplane pass over the same artifact (``--spec-gamma``,
 ``--spec-draft-bits``); ``--spec layerskip`` early-exits after
@@ -38,6 +42,10 @@ def main():
                          "batching for attention stacks)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size (tokens) for the paged runtime")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix caching: requests sharing a prompt "
+                         "prefix reuse its KV pages (refcounted, COW; "
+                         "tokens identical to caching off)")
     ap.add_argument("--spec", default=None,
                     choices=["bitplane", "layerskip", "artifact"],
                     help="speculative decoding draft provider (paged runtime; "
@@ -85,7 +93,8 @@ def main():
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
                                         max_len=args.max_len,
                                         runtime=args.runtime,
-                                        page_size=args.page_size, spec=spec)
+                                        page_size=args.page_size, spec=spec,
+                                        prefix_cache=args.prefix_cache)
         cfg = eng.cfg
         print(f"arch={cfg.name} cold boot from {args.artifact} "
               f"(zero float weights, runtime={eng.runtime})")
@@ -108,7 +117,7 @@ def main():
         eng = ServeEngine(cfg, params, batch_size=args.batch,
                           max_len=args.max_len, da_mode=mode,
                           runtime=args.runtime, page_size=args.page_size,
-                          spec=spec)
+                          spec=spec, prefix_cache=args.prefix_cache)
         if mode is not None:
             rep = da_memory_report(eng.params)
             print(f"pre-VMM freeze: {rep['da_matrices']} matrices"
@@ -118,10 +127,17 @@ def main():
             print(f"artifact -> {eng.save_artifact(args.save_artifact)}")
 
     rng = np.random.default_rng(0)
+    # with prefix caching on, give the workload the shape the cache is for:
+    # every request opens with the same "system prompt" prefix; the unique
+    # tail is capped so shared + tail always fits --max-len
+    shared = (rng.integers(0, cfg.vocab, min(48, args.max_len // 2))
+              if args.prefix_cache else rng.integers(0, cfg.vocab, 0))
+    tail_hi = max(5, min(32, args.max_len - len(shared) - 4))
     t0 = time.perf_counter()
     for uid in range(args.requests):
+        tail = rng.integers(0, cfg.vocab, rng.integers(4, tail_hi))
         eng.submit(Request(uid=uid,
-                           prompt=rng.integers(0, cfg.vocab, rng.integers(4, 32)),
+                           prompt=np.concatenate([shared, tail]),
                            max_new_tokens=args.max_new))
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -135,6 +151,11 @@ def main():
               f"draft_steps={sm['draft_steps']} "
               f"verify_steps={sm['verify_steps']} "
               f"disabled={sm['disabled_requests']}")
+    pm = eng.metrics().get("prefix_cache")
+    if pm:
+        print(f"prefix-cache hit_rate={pm['hit_rate']:.2f} "
+              f"cached_tokens={pm['cached_tokens']} "
+              f"evictions={pm['evictions']} cow={pm['cow_copies']}")
 
 
 if __name__ == "__main__":

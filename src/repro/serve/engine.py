@@ -279,6 +279,7 @@ class ServeEngine:
         token_budget: Optional[int] = None,
         admission: str = "reserve",
         spec=None,
+        prefix_cache: bool = False,
     ):
         # spec: speculative decoding over the paged runtime — a
         # repro.spec.SpecConfig, or a provider-name shorthand
@@ -286,6 +287,11 @@ class ServeEngine:
         # tokens with the provider's cheap pass, verifies them in one
         # batched full-precision step; greedy output is token-identical to
         # non-speculative decoding.
+        # prefix_cache: shared-prefix caching over the paged KV pool —
+        # requests sharing a prompt prefix (system prompts, few-shot
+        # headers) reuse its KV pages instead of re-prefilling them;
+        # refcounted pages with copy-on-write keep decoded tokens
+        # bit-identical to caching off.
         # da_mode: freeze float params through the DA artifact pipeline
         # ("auto" plans a backend per layer from measured + analytic costs;
         # a registered backend name pins every layer).  Params that already
@@ -325,6 +331,7 @@ class ServeEngine:
                 greedy=greedy, page_size=page_size, n_pages=n_pages,
                 prefill_chunk=prefill_chunk, prefill_lanes=prefill_lanes,
                 token_budget=token_budget, admission=admission, spec=spec,
+                prefix_cache=prefix_cache,
             )
         elif runtime == "slots":
             if spec is not None:
@@ -332,6 +339,12 @@ class ServeEngine:
                     "speculative decoding runs on the paged runtime only "
                     "(draft rollback needs page tables); drop spec= or use "
                     "runtime='paged'"
+                )
+            if prefix_cache:
+                raise ValueError(
+                    "prefix caching shares physical KV pages between "
+                    "requests; the dense slot runtime has no page tables to "
+                    "share — drop prefix_cache= or use runtime='paged'"
                 )
             self._rt = _SlotRuntime(cfg, params, batch_size, max_len, greedy)
         else:

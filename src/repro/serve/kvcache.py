@@ -25,8 +25,8 @@ allocator and tables are host state owned by the scheduler.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Dict, List, Optional, Sequence
+from collections import Counter, deque
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -97,11 +97,19 @@ def table_array(tables: Sequence[Sequence[int]], width: int) -> np.ndarray:
 
 
 class PagePool:
-    """Host-side physical-page allocator (free list + stats).
+    """Host-side physical-page allocator (free list + refcounts + stats).
 
     ``alloc`` returns ``None`` on exhaustion instead of raising — the
     scheduler turns that into queue backpressure (requests wait) or
     preemption, never a crash.
+
+    Pages are **refcounted**: ``alloc`` hands a page out with one reference,
+    shared-prefix caching adds more (``incref`` — one per page table that
+    names the page, plus one for the prefix trie), and ``free`` *releases one
+    reference*; the page returns to the free list only when its last owner
+    lets go. Releasing a reference that was never taken (freeing a page
+    twice) raises — a double-freed page would enter the free list twice and
+    get handed to two requests, silently corrupting both requests' KV.
     """
 
     def __init__(self, n_pages: int):
@@ -109,6 +117,7 @@ class PagePool:
             raise ValueError("pool needs >= 2 pages (page 0 is the garbage page)")
         self.n_pages = n_pages
         self._free: deque = deque(range(1, n_pages))  # page 0 reserved
+        self._ref: List[int] = [0] * n_pages
         self._allocs = 0
         self._frees = 0
 
@@ -120,22 +129,56 @@ class PagePool:
     def used_pages(self) -> int:
         return self.n_pages - 1 - len(self._free)
 
+    @property
+    def shared_pages(self) -> int:
+        return sum(1 for r in self._ref if r > 1)
+
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n physical pages, or None (backpressure) if the pool can't cover
-        the request — partial allocations are never handed out."""
+        """n physical pages (one reference each), or None (backpressure) if
+        the pool can't cover the request — partial allocations are never
+        handed out."""
         if n > len(self._free):
             return None
         self._allocs += n
-        return [self._free.popleft() for _ in range(n)]
+        out = []
+        for _ in range(n):
+            p = self._free.popleft()
+            self._ref[p] = 1
+            out.append(p)
+        return out
+
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
+    def incref(self, pages: Sequence[int]) -> None:
+        """Add one reference per page (a new sharer of already-live pages)."""
+        for p in pages:
+            if not 1 <= p < self.n_pages or self._ref[p] < 1:
+                raise ValueError(f"incref on non-live page {p}")
+        for p in pages:
+            self._ref[p] += 1
 
     def free(self, pages: Sequence[int]) -> None:
-        for p in pages:
+        """Release one reference per page; a page whose last reference drops
+        returns to the free list.  Raises on double-free (more releases than
+        live references, duplicates within one call included) BEFORE any
+        state moves, so an error never half-frees a batch."""
+        need = Counter(pages)
+        for p, c in need.items():
             if not 1 <= p < self.n_pages:
                 raise ValueError(f"freeing invalid page {p}")
-            self._free.append(p)
+            if self._ref[p] < c:
+                raise ValueError(
+                    f"double-free of page {p}: {c} release(s) requested but "
+                    f"only {self._ref[p]} reference(s) held"
+                )
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
         self._frees += len(pages)
 
     def stats(self) -> Dict[str, int]:
@@ -143,6 +186,7 @@ class PagePool:
             "n_pages": self.n_pages,
             "free_pages": self.free_pages,
             "used_pages": self.used_pages,
+            "shared_pages": self.shared_pages,
             "alloc_count": self._allocs,
             "free_count": self._frees,
         }
@@ -195,13 +239,26 @@ def rollback(pool: PagePool, table: List[int], ckpt: PageCheckpoint,
     """
     keep = ckpt.n_pages if keep is None else max(keep, ckpt.n_pages)
     if keep > len(table):
-        return []
+        # accepted context claims pages that were never allocated — an
+        # accounting error upstream; masking it with [] would let the caller
+        # decode into pages it does not own
+        raise ValueError(
+            f"rollback keep={keep} exceeds the table's {len(table)} pages: "
+            f"accepted context covers pages that were never allocated"
+        )
     dropped = table[keep:]
     for p in dropped:  # validate BEFORE mutating: error → state untouched
         if not 1 <= p < pool.n_pages:
             raise ValueError(f"rolling back invalid page {p}")
+        if pool._ref[p] != 1:
+            raise ValueError(
+                f"rolling back shared page {p} (refcount {pool._ref[p]}): "
+                f"draft growth must own its pages exclusively — a rollback "
+                f"would yank KV out from under the other sharers"
+            )
     del table[keep:]
     for p in reversed(dropped):
+        pool._ref[p] = 0
         pool._free.appendleft(p)
     pool._allocs -= len(dropped)
     return dropped
@@ -222,7 +279,17 @@ def _remap_pages(leaf: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
     raise ValueError(f"unexpected pool rank {leaf.ndim}")
 
 
-def defrag(caches, pool: PagePool, tables: List[List[int]]):
+def copy_page(caches, src: int, dst: int):
+    """Duplicate physical page ``src``'s rows into page ``dst`` across every
+    pool leaf — the device half of copy-on-write: a lane about to write into
+    a shared page gets a private copy first (the caller rewrites its table
+    and moves the refcounts)."""
+    s = jnp.asarray([src], dtype=jnp.int32)
+    d = jnp.asarray([dst], dtype=jnp.int32)
+    return jax.tree.map(lambda leaf: _remap_pages(leaf, s, d), caches)
+
+
+def defrag(caches, pool: PagePool, tables: List[List[int]], trie=None):
     """Compact live pages to the front of the pool.
 
     With full page-table indirection, pool fragmentation never costs decode
@@ -231,8 +298,24 @@ def defrag(caches, pool: PagePool, tables: List[List[int]]):
     remapped cache tree and rewrites ``pool``/``tables`` host state in place.
     Decode output is bit-identical before and after (pages move, the tables
     move with them).
+
+    ``trie`` — an optional :class:`PrefixCache`: its cached pages are live
+    too (they hold reusable prefix KV with no owning lane) and are remapped
+    alongside the page tables.  Because defrag walks every owner, it doubles
+    as a leak check: a page holding references that no table and no trie
+    node can account for has been lost by its owner and is reported, not
+    silently compacted away.
     """
-    live = sorted({p for t in tables for p in t})
+    held = [] if trie is None else trie.pages()
+    live_set = {p for t in tables for p in t} | set(held)
+    live = sorted(live_set)
+    orphans = [p for p in range(1, pool.n_pages)
+               if pool._ref[p] > 0 and p not in live_set]
+    if orphans:
+        raise ValueError(
+            f"defrag found leaked pages {orphans}: live refcounts with no "
+            f"owning page table or prefix-cache node"
+        )
     mapping = {src: dst for dst, src in enumerate(live, start=1)}
     moves = [(s, d) for s, d in mapping.items() if s != d]
     if moves:
@@ -241,5 +324,196 @@ def defrag(caches, pool: PagePool, tables: List[List[int]]):
         caches = jax.tree.map(lambda leaf: _remap_pages(leaf, src, dst), caches)
     for t in tables:
         t[:] = [mapping[p] for p in t]
+    if trie is not None:
+        trie.remap(mapping)
+    ref = [0] * pool.n_pages
+    for s, d in mapping.items():
+        ref[d] = pool._ref[s]
+    pool._ref = ref
     pool._free = deque(range(len(live) + 1, pool.n_pages))
     return caches
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix cache: a radix/trie index over page-granular token prefixes
+# ---------------------------------------------------------------------------
+
+
+class _TrieNode:
+    """One cached physical page: ``key`` is the page's full token tuple,
+    ``page`` the physical page whose KV holds exactly those tokens (given
+    the ancestor chain as context)."""
+
+    __slots__ = ("key", "page", "parent", "children", "last_used")
+
+    def __init__(self, key: Tuple[int, ...], page: int,
+                 parent: Optional["_TrieNode"]):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_TrieNode"] = {}
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Host-side radix index over token prefixes, at page granularity.
+
+    The freeze-once premise applied to KV: a prompt prefix's KV depends only
+    on the prefix tokens, so two requests sharing a system prompt can share
+    the physical pages that hold it.  Each trie node is one *full* page of
+    tokens; a path from the root spells a prefix and names the pages holding
+    its KV.  The trie owns one refcount per cached page (so pages survive
+    their originating request); every admitted lane that reuses a node adds
+    its own reference via :meth:`claim`.
+
+    Writes into a shared page are forbidden — the scheduler copies the page
+    first (:func:`copy_page`, COW), which is only ever needed on the *last,
+    partially-consumed* page of a hit (a hit is capped at ``len(prompt)-1``
+    tokens so at least one token remains to prefill — its logits seed the
+    first sampled token — and that cap can land mid-page).
+
+    Eviction is LRU over leaf nodes whose page only the trie references
+    (refcount 1): interior nodes keep their subtree reachable, and pages a
+    live lane still shares are merely unindexed (the lane's reference keeps
+    them alive).  All state is host-side; the KV itself never moves on a
+    hit, an insert, or an eviction.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root = _TrieNode((), GARBAGE_PAGE, None)
+        self._tick = 0
+        self.evictions = 0
+        self.cached_tokens = 0   # cumulative tokens served from the cache
+        self.lookup_tokens = 0   # cumulative prompt tokens looked up
+
+    # -- traversal -----------------------------------------------------------
+    def nodes(self) -> Iterator[_TrieNode]:
+        stack = list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            yield nd
+            stack.extend(nd.children.values())
+
+    def pages(self) -> List[int]:
+        return [nd.page for nd in self.nodes()]
+
+    @property
+    def n_pages(self) -> int:
+        return sum(1 for _ in self.nodes())
+
+    def _touch(self, node: _TrieNode) -> None:
+        self._tick += 1
+        node.last_used = self._tick
+
+    # -- lookup / claim ------------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> Tuple[List[_TrieNode], int]:
+        """Longest cached page-chain prefix of ``tokens``.
+
+        Returns ``(nodes, hit_tokens)``.  ``hit_tokens`` is capped at
+        ``len(tokens) - 1`` — the final token always prefills so its logits
+        can seed sampling; when the cap lands inside the last matched page,
+        that page is handed over anyway (its KV for the covered positions is
+        valid) and the lane's first write COWs it.  Read-only: refcounts
+        move in :meth:`claim`, once admission actually goes through.
+        """
+        ps = self.page_size
+        limit = len(tokens) - 1
+        nodes: List[_TrieNode] = []
+        node, i = self.root, 0
+        while i + ps <= len(tokens) and i < limit:
+            child = node.children.get(tuple(int(t) for t in tokens[i:i + ps]))
+            if child is None:
+                break
+            nodes.append(child)
+            node, i = child, i + ps
+        return nodes, min(i, limit)
+
+    def claim(self, nodes: Sequence[_TrieNode], pool: PagePool) -> List[int]:
+        """Pin a matched chain for an admitted lane: one reference per page
+        plus an LRU touch. Returns the pages in prefix order."""
+        pages = [nd.page for nd in nodes]
+        pool.incref(pages)
+        for nd in nodes:
+            self._touch(nd)
+        return pages
+
+    # -- insert --------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], pages: Sequence[int],
+               pool: PagePool) -> int:
+        """Index every full page of ``tokens`` (a lane's fully-ingested
+        prompt, KV written).  Prefixes already cached keep the trie's copy
+        (two physical pages may hold identical KV; dedup is not worth a
+        device copy); new nodes take one trie-owned reference on the lane's
+        page. Returns the number of nodes created."""
+        ps = self.page_size
+        node, new = self.root, 0
+        for j in range(len(tokens) // ps):
+            key = tuple(int(t) for t in tokens[j * ps:(j + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                pool.incref([pages[j]])
+                child = _TrieNode(key, pages[j], node)
+                node.children[key] = child
+                new += 1
+            self._touch(child)
+            node = child
+        return new
+
+    # -- eviction ------------------------------------------------------------
+    def reclaimable(self, pool: PagePool) -> int:
+        """Pages eviction could return to the free list right now (cached
+        pages no live lane shares)."""
+        return sum(1 for nd in self.nodes() if pool.refcount(nd.page) == 1)
+
+    def evict_one(self, pool: PagePool) -> bool:
+        """Drop the least-recently-used *reclaimable* leaf (page owned by
+        the trie alone — its page returns to the free list).  A pinned leaf
+        (live lanes still share its page) is only unindexed when it shields
+        a reclaimable interior node; with nothing reclaimable anywhere this
+        returns False instead of draining the hot shared-prefix index for
+        zero freed pages."""
+        if not any(pool.refcount(nd.page) == 1 for nd in self.nodes()):
+            return False
+        leaves = [nd for nd in self.nodes() if not nd.children]
+        free = [nd for nd in leaves if pool.refcount(nd.page) == 1]
+        if not free:
+            # every reclaimable page sits on an interior node: unindex only
+            # leaves whose ancestor chain holds one (never an unrelated hot
+            # chain that would lose its cache for zero freed pages)
+            def shields(nd):
+                a = nd.parent
+                while a is not None and a.parent is not None:
+                    if pool.refcount(a.page) == 1:
+                        return True
+                    a = a.parent
+                return False
+
+            free = [nd for nd in leaves if shields(nd)]
+        victim = min(free, key=lambda nd: nd.last_used)
+        del victim.parent.children[victim.key]
+        pool.free([victim.page])
+        self.evictions += 1
+        return True
+
+    def evict_until(self, pool: PagePool, n_free: int) -> bool:
+        """Evict LRU leaves until ``n_free`` pages are free; True on success
+        (interior nodes become leaves as their subtrees drain, so every
+        trie-only page is eventually reachable)."""
+        while pool.free_pages < n_free:
+            if not self.evict_one(pool):
+                return False
+        return True
+
+    def clear(self, pool: PagePool) -> None:
+        """Unindex everything and release the trie's references (pool
+        shutdown / tests); pages live lanes share stay live through the
+        lanes' own references."""
+        for nd in list(self.nodes()):
+            pool.free([nd.page])
+        self.root.children = {}
+
+    # -- defrag hook ---------------------------------------------------------
+    def remap(self, mapping: Dict[int, int]) -> None:
+        for nd in self.nodes():
+            nd.page = mapping[nd.page]

@@ -31,7 +31,16 @@ Host-side state (the scheduler) vs device state (the paged pools):
   for ``stall_patience`` consecutive steps are preempted too;
 * per-request streaming callbacks (``Request.on_token``) and wall-clock
   latency/throughput metrics (TTFT, inter-token p50/p99) come for free from
-  the host loop.
+  the host loop;
+* ``prefix_cache=True`` turns on shared-prefix caching: fully-ingested
+  prompt pages are indexed in a host-side trie (``kvcache.PrefixCache``),
+  admission looks the new prompt up and skips prefill for every cached page
+  (the pages are shared by refcount; the hit shrinks both the chunk plan
+  and the admission reservation), writes into a still-shared last page
+  copy-on-write first, and pool pressure evicts LRU cached prefixes before
+  backpressure kicks in.  Decoded tokens are bit-identical with the cache
+  on or off — hits reuse KV a previous request computed over the exact
+  same prefix.
 """
 from __future__ import annotations
 
@@ -49,7 +58,9 @@ from repro.models.model import forward
 from repro.serve.kvcache import (
     GARBAGE_PAGE,
     PagePool,
+    PrefixCache,
     checkpoint as kv_checkpoint,
+    copy_page,
     defrag,
     init_paged_caches,
     pad_position,
@@ -78,9 +89,11 @@ class Request:
     eos_id: int = -1              # -1 → never stops early
     on_token: Optional[Callable[[int, int], None]] = None  # stream (uid, tok)
     generated: Optional[List[int]] = None
-    # wall-clock metrics, stamped by the runtime
+    # wall-clock metrics, stamped by the runtime (first_token_t is None until
+    # the first token lands — perf_counter can legally return exactly 0.0, so
+    # "unset" must not be encoded as a float value)
     submit_t: float = 0.0
-    first_token_t: float = 0.0
+    first_token_t: Optional[float] = None
     finish_t: float = 0.0
     token_times: Optional[List[float]] = None
 
@@ -92,11 +105,16 @@ class Request:
 
 
 def latency_metrics(reqs) -> Dict[str, float]:
-    """TTFT and inter-token latency percentiles (ms) over finished requests."""
+    """TTFT and inter-token latency percentiles (ms) over finished requests.
+
+    Zeroed keys (never a crash) when nothing has finished yet; a request
+    whose first token landed at wall-clock 0.0 exactly still counts — the
+    unset sentinel is None, not falsiness."""
     itl: List[float] = []
     for r in reqs:
         itl.extend(b - a for a, b in zip(r.token_times, r.token_times[1:]))
-    ttft = [r.first_token_t - r.submit_t for r in reqs if r.first_token_t]
+    ttft = [r.first_token_t - r.submit_t for r in reqs
+            if r.first_token_t is not None]
 
     def pct(xs, q):
         return float(np.percentile(xs, q)) * 1e3 if xs else 0.0
@@ -165,6 +183,7 @@ class _Lane:
     pos: int = 0                  # ctx tokens already written to the KV pool
     admitted_t: float = 0.0
     stalled_steps: int = 0
+    cached: bool = False          # prompt pages already offered to the trie
     draft_pos: int = 0            # ctx tokens the DRAFT model has ingested
     #                               (own-cache providers only; self-draft
     #                               providers read the target's verified KV)
@@ -193,6 +212,7 @@ class PagedScheduler:
         admission: str = "reserve",
         stall_patience: int = 64,
         spec: Optional[SpecConfig] = None,
+        prefix_cache: bool = False,
     ):
         if admission not in ("reserve", "optimistic"):
             raise ValueError(f"unknown admission policy {admission!r}")
@@ -226,12 +246,19 @@ class PagedScheduler:
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
         self._preempted: set = set()  # uids waiting on a full-ctx re-admit
+        # shared-prefix caching: a host-side trie over page-granular prompt
+        # prefixes; hits skip prefill for cached pages and share them by
+        # refcount (COW guards the last partial page)
+        self.prefix = PrefixCache(page_size) if prefix_cache else None
         # counters
         self.steps = 0
         self.out_tokens = 0
         self.ctx_tokens = 0
         self.preemptions = 0
         self.step_compiles = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.cow_copies = 0
         self._start_t: Optional[float] = None
         base = make_paged_step(cfg)
 
@@ -326,11 +353,26 @@ class PagedScheduler:
                 continue
             req = self.queue[0]
             ctx = list(int(t) for t in req.prompt) + list(req.generated)
+            hit_nodes, hit = ([], 0)
+            if self.prefix is not None:
+                hit_nodes, hit = self.prefix.match(ctx)
+            # a hit mid-page means the lane's first write COWs the last
+            # shared page — one extra allocation the reservation must carry
+            cow_extra = 1 if hit % self.page_size else 0
             if self.admission == "reserve":
                 held = sum(self._lane_reservation(l)
                            for l in self.lanes if l is not None)
-                worst = self._worst_pages(
+                # discount only hit pages a RUNNING lane also holds (those
+                # are already inside `held`, so the shared page would be
+                # counted twice); trie-only hit pages occupy pool capacity
+                # no reservation covers, so they stay in this lane's worst —
+                # the reserve invariant (worst-case always fits) survives
+                live = {p for l in self.lanes if l is not None
+                        for p in l.pages}
+                discount = sum(1 for nd in hit_nodes if nd.page in live)
+                worst = (self._worst_pages(
                     len(ctx), req.max_new_tokens - len(req.generated))
+                    - discount + cow_extra)
                 if held + worst > self.pool.n_pages - 1:
                     return  # backpressure: head-of-line waits for pages
             else:
@@ -340,20 +382,34 @@ class PagedScheduler:
                 # preempted again, replaying its prefill forever). A
                 # PREEMPTED request re-admits only when its whole
                 # accumulated context fits: resuming it on a first-chunk
-                # sliver would just replay-and-evict in a loop.
-                need = (len(ctx) if req.uid in self._preempted
-                        else min(len(ctx), self.prefill_chunk))
+                # sliver would just replay-and-evict in a loop.  Cached
+                # prefix pages are already resident: only the uncovered
+                # remainder needs fresh pages.
+                need = (len(ctx) - hit if req.uid in self._preempted
+                        else min(len(ctx) - hit, self.prefill_chunk))
                 headroom = max(2, self.pool.n_pages // 16)
                 # cap at pool capacity: a request whose ctx+headroom exceeds
                 # the whole pool must still admit once the pool drains, or
                 # it would wait forever on a condition that cannot occur
-                want = min(pages_for(need, self.page_size) + headroom,
-                           self.pool.n_pages - 1)
-                if not self.pool.can_alloc(want):
+                want = min(pages_for(hit + need, self.page_size)
+                           - len(hit_nodes) + cow_extra + headroom,
+                           self.pool.n_pages - 1 - len(hit_nodes))
+                if not self._can_cover(want):
                     return
                 self._preempted.discard(req.uid)
             self.queue.pop(0)
-            self.lanes[i] = _Lane(req=req, pages=[], ctx=ctx,
+            pages: List[int] = []
+            if self.prefix is not None:
+                self.prefix_lookups += 1
+                # denominator of hit_rate: prompt tokens only — generated
+                # tokens of a re-admitted preempted request are never
+                # cacheable, so counting them would deflate the rate
+                self.prefix.lookup_tokens += len(req.prompt)
+                if hit_nodes:
+                    pages = self.prefix.claim(hit_nodes, self.pool)
+                    self.prefix_hits += 1
+                    self.prefix.cached_tokens += hit
+            self.lanes[i] = _Lane(req=req, pages=pages, ctx=ctx, pos=hit,
                                   admitted_t=time.perf_counter())
 
     # -- preemption / eviction -----------------------------------------------
@@ -375,15 +431,77 @@ class PagedScheduler:
             return None
         return max(cands, key=lambda t: t[1].admitted_t)[0]
 
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Pool allocation with prefix-cache spill: on exhaustion, evict LRU
+        trie nodes (cached prefixes nobody is running) before giving up."""
+        got = self.pool.alloc(n)
+        if (got is None and self.prefix is not None
+                and self.prefix.evict_until(self.pool, n)):
+            got = self.pool.alloc(n)
+        return got
+
+    def _can_cover(self, n: int) -> bool:
+        """Could ``n`` pages be produced right now (free + evictable)?"""
+        free = self.pool.free_pages
+        if self.prefix is not None:
+            free += self.prefix.reclaimable(self.pool)
+        return n <= free
+
+    def _cow_shared_page(self, lane: _Lane) -> bool:
+        """Copy-on-write guard, called before KV rows are written at
+        ``lane.pos``: if that position lands in a page other owners (the
+        prefix trie, or lanes sharing the prefix) still reference, give the
+        lane a private copy first — a write into a shared page would corrupt
+        every other reader's KV. Only the last, partially-consumed page of a
+        prefix hit can be in this state; pages past it are always exclusive.
+        Returns False when no page can be found for the copy (backpressure).
+        """
+        if self.prefix is None:
+            return True
+        idx = lane.pos // self.page_size
+        if idx >= len(lane.pages):
+            return True
+        src = lane.pages[idx]
+        if self.pool.refcount(src) <= 1:
+            return True
+        got = self._alloc(1)
+        if got is None:
+            return False
+        dst = got[0]
+        if self.draft_caches is not None:
+            # an own-cache draft provider indexes its pools with the SAME
+            # page tables — its copy rides the same COW
+            both = copy_page({"t": self.caches, "d": self.draft_caches},
+                             src, dst)
+            self.caches, self.draft_caches = both["t"], both["d"]
+        else:
+            self.caches = copy_page(self.caches, src, dst)
+        lane.pages[idx] = dst
+        self.pool.free([src])  # drop the lane's reference on the shared page
+        self.cow_copies += 1
+        return True
+
+    def _maybe_cache_prefix(self, lane: _Lane) -> None:
+        """Offer a lane's prompt pages to the trie once the prompt is fully
+        ingested (every full prompt page then holds valid KV)."""
+        if (self.prefix is None or lane.cached
+                or lane.pos < len(lane.req.prompt)):
+            return
+        lane.cached = True
+        self.prefix.insert(lane.ctx[: len(lane.req.prompt)], lane.pages,
+                           self.pool)
+
     def _ensure_pages(self, lane: _Lane, n: int) -> int:
         """Grow lane.pages to cover pos+n tokens; returns the n actually
         covered — a prefill chunk shrinks to what free pages allow, 0 means
         fully deferred (backpressure, not a crash)."""
+        if n > 0 and not self._cow_shared_page(lane):
+            return 0
         while n > 0:
             need = pages_for(lane.pos + n, self.page_size) - len(lane.pages)
             if need <= 0:
                 return n
-            got = self.pool.alloc(need)
+            got = self._alloc(need)
             if got is not None:
                 lane.pages.extend(got)
                 return n
@@ -491,6 +609,7 @@ class PagedScheduler:
         for r, i, l in rows:
             l.pos += plan[i]
             self.ctx_tokens += plan[i]
+            self._maybe_cache_prefix(l)  # before _sample can free the pages
             if l.remaining == 0:  # chunk covered the last unseen token
                 self._sample(i, l, logits[r], now)
         return {i for _, i, _ in rows}
@@ -525,6 +644,7 @@ class PagedScheduler:
         for r, i, l in rows:
             l.pos += 1
             self.ctx_tokens += 1
+            self._maybe_cache_prefix(l)  # before _sample can free the pages
             self._sample(i, l, logits[r], now)
         return {i for i, _ in live}
 
@@ -557,9 +677,15 @@ class PagedScheduler:
                   and l.pos + g + 1 <= addressable)
             if ok:
                 ck = kv_checkpoint(self.pool, l.pages)
+                # drafts must never roll back (or write into) a SHARED page:
+                # COW the last partial prefix-hit page before any draft KV
+                # lands, so rollback only ever touches exclusively-owned
+                # growth (page shortage demotes the lane to plain decode)
+                if not self._cow_shared_page(l):
+                    ok = False
                 need = pages_for(l.pos + g + 1, self.page_size) - len(l.pages)
-                if need > 0:
-                    got = self.pool.alloc(need)
+                if ok and need > 0:
+                    got = self._alloc(need)
                     if got is None:
                         ok = False
                     else:
@@ -708,6 +834,7 @@ class PagedScheduler:
             if self.lanes[i] is l:  # still running: release rejected pages
                 kv_rollback(self.pool, l.pages, ckpts[i],
                             keep=pages_for(l.pos, self.page_size))
+                self._maybe_cache_prefix(l)
             out.add(i)
         return out
 
@@ -836,14 +963,17 @@ class PagedScheduler:
         move with them; decode output is unchanged).  An own-cache draft
         provider's pools are indexed by the SAME page tables, so they must
         move under the same remap — both trees ride one defrag call (the
-        tables and pool free list are rewritten exactly once)."""
+        tables and pool free list are rewritten exactly once).  Trie-held
+        prefix pages are live owners too: they remap alongside the tables,
+        so cached prefixes keep hitting across a defrag."""
         tables = [l.pages for l in self.lanes if l is not None]
         if self.draft_caches is not None:
             both = defrag({"target": self.caches, "draft": self.draft_caches},
-                          self.pool, tables)
+                          self.pool, tables, trie=self.prefix)
             self.caches, self.draft_caches = both["target"], both["draft"]
         else:
-            self.caches = defrag(self.caches, self.pool, tables)
+            self.caches = defrag(self.caches, self.pool, tables,
+                                 trie=self.prefix)
 
     def metrics(self) -> Dict[str, Any]:
         wall = (time.perf_counter() - self._start_t) if self._start_t else 0.0
@@ -869,6 +999,21 @@ class PagedScheduler:
                 "enabled_requests": sum(
                     1 for s in self._spec_state.values() if s["on"]),
             }
+        prefix = None
+        if self.prefix is not None:
+            pc = self.prefix
+            prefix = {
+                "lookups": self.prefix_lookups,
+                "hits": self.prefix_hits,
+                # token-weighted: the share of admitted prompt tokens whose
+                # KV came off cached pages instead of prefill compute
+                "hit_rate": (pc.cached_tokens / pc.lookup_tokens
+                             if pc.lookup_tokens else 0.0),
+                "cached_tokens": pc.cached_tokens,
+                "evictions": pc.evictions,
+                "trie_pages": pc.n_pages,
+                "cow_copies": self.cow_copies,
+            }
         return {
             "runtime": "paged",
             "requests_done": len(self.done),
@@ -881,5 +1026,6 @@ class PagedScheduler:
             "tokens_per_s": self.out_tokens / wall if wall > 0 else 0.0,
             "pool": self.pool.stats(),
             "spec": spec,
+            "prefix_cache": prefix,
             **latency_metrics(self.done.values()),
         }

@@ -222,3 +222,193 @@ def test_defrag_compacts_and_preserves_gathered_content(stacked):
     assert pool.free_pages == n_pages - 1 - 3
     for b, a in zip(before, after):
         np.testing.assert_array_equal(b, a)
+
+
+# ---------------------------------------------------------------------------
+# refcounted ownership: double-free detection, sharing, the prefix trie
+# ---------------------------------------------------------------------------
+def test_pool_double_free_raises_and_leaves_state_intact():
+    """Regression: a double-freed page used to enter the free list twice and
+    get handed to two requests (silent KV corruption). Every release is now
+    checked against the refcount ledger BEFORE any state moves."""
+    pool = PagePool(6)
+    a = pool.alloc(2)
+    pool.free([a[0]])
+    before = (list(pool._free), pool.stats())
+    with pytest.raises(ValueError, match="double-free"):
+        pool.free([a[0]])
+    with pytest.raises(ValueError, match="double-free"):
+        pool.free([a[1], a[1]])  # duplicates inside one call count too
+    assert (list(pool._free), pool.stats()) == before
+    pool.free([a[1]])
+    assert pool.used_pages == 0
+
+
+def test_pool_refcount_sharing():
+    pool = PagePool(6)
+    (p,) = pool.alloc(1)
+    pool.incref([p])
+    assert pool.refcount(p) == 2 and pool.shared_pages == 1
+    pool.free([p])          # one sharer lets go: page stays live
+    assert pool.refcount(p) == 1 and pool.used_pages == 1
+    pool.free([p])          # last owner: page returns to the free list
+    assert pool.used_pages == 0
+    with pytest.raises(ValueError):
+        pool.incref([p])    # no longer live — nothing to share
+
+
+def test_rollback_keep_beyond_table_raises():
+    """Regression: keep > len(table) used to return [] silently, masking an
+    upstream accounting error (accepted context claiming pages that were
+    never allocated)."""
+    pool = PagePool(8)
+    table = pool.alloc(2)
+    ck = checkpoint(pool, table)
+    before = (_pool_state(pool), list(table))
+    with pytest.raises(ValueError, match="never allocated"):
+        rollback(pool, table, ck, keep=3)
+    assert (_pool_state(pool), list(table)) == before
+
+
+def test_rollback_refuses_shared_pages():
+    """A draft must own its speculative growth exclusively: rolling back a
+    page another owner shares would yank KV out from under the sharer."""
+    pool = PagePool(8)
+    table = pool.alloc(1)
+    ck = checkpoint(pool, table)
+    grown = pool.alloc(2)
+    table.extend(grown)
+    pool.incref([grown[1]])  # someone else now references a drafted page
+    before = (list(pool._free), list(table))
+    with pytest.raises(ValueError, match="shared page"):
+        rollback(pool, table, ck)
+    assert (list(pool._free), list(table)) == before
+
+
+def test_prefix_trie_match_insert_claim():
+    from repro.serve.kvcache import PrefixCache
+
+    ps = 4
+    pool = PagePool(12)
+    trie = PrefixCache(ps)
+    toks = list(range(10))        # 2 full pages + 2 tokens
+    pages = pool.alloc(3)
+    assert trie.match(toks) == ([], 0)
+    assert trie.insert(toks, pages, pool) == 2   # full pages only
+    assert pool.refcount(pages[0]) == 2          # trie's own reference
+    assert pool.refcount(pages[2]) == 1          # partial page never cached
+    nodes, hit = trie.match(toks)
+    assert [n.page for n in nodes] == pages[:2] and hit == 8
+    # an exactly-2-page prompt caps at len-1: the hit lands mid-page and
+    # hands over the last page anyway (the lane COWs it before writing)
+    nodes, hit = trie.match(toks[:8])
+    assert hit == 7 and len(nodes) == 2
+    # divergence in the second page stops the walk after one node
+    nodes, hit = trie.match(toks[:4] + [99, 98, 97, 96, 95])
+    assert hit == 4 and len(nodes) == 1
+    assert trie.claim(nodes, pool) == [pages[0]]
+    assert pool.refcount(pages[0]) == 3
+    # re-inserting an indexed prefix keeps the trie's copy (no new nodes,
+    # no reference on the other lane's physical pages)
+    other = pool.alloc(2)
+    assert trie.insert(toks[:8], other, pool) == 0
+    assert pool.refcount(other[0]) == 1
+
+
+def test_prefix_trie_lru_eviction_and_pinning():
+    from repro.serve.kvcache import PrefixCache
+
+    ps = 4
+    pool = PagePool(12)
+    trie = PrefixCache(ps)
+    a = pool.alloc(2)
+    trie.insert(list(range(8)), a, pool)                    # older chain
+    b = pool.alloc(2)
+    trie.insert([50, 51, 52, 53, 60, 61, 62, 63], b, pool)  # newer chain
+    pool.free(a)
+    pool.free(b)              # lanes done: the trie is now the only owner
+    assert pool.used_pages == 4 and trie.reclaimable(pool) == 4
+    free0 = pool.free_pages
+    assert trie.evict_one(pool)            # LRU leaf = tail of chain a
+    assert trie.evict_one(pool)            # its parent became a leaf
+    assert pool.free_pages == free0 + 2
+    nodes, hit = trie.match([50, 51, 52, 53, 60, 61, 62, 63, 70])
+    assert hit == 8                        # chain b survived (more recent)
+    # pinning: a lane claims chain b, then eviction empties the trie —
+    # the pages stay live through the lane's references
+    claimed = trie.claim(nodes, pool)
+    trie.clear(pool)
+    assert trie.n_pages == 0
+    assert all(pool.refcount(p) == 1 for p in claimed)
+    pool.free(claimed)
+    assert pool.used_pages == 0
+
+
+def test_defrag_remaps_trie_pages_and_detects_leaks():
+    from repro.serve.kvcache import PrefixCache
+
+    n_pages, ps = 10, 4
+    pool = PagePool(n_pages)
+    pages = pool.alloc(5)
+    trie = PrefixCache(ps)
+    trie.insert(list(range(8)), pages[3:], pool)  # cache pages 4 and 5
+    pool.free(pages)        # the lane exits; only trie references remain
+    caches = {"pos_0": _pool_leaves(n_pages, ps, stacked=False)}
+
+    def gathered():
+        return np.asarray(jnp.take(caches["pos_0"].k,
+                                   jnp.asarray(trie.pages()), axis=0))
+
+    before = gathered()
+    caches = defrag(caches, pool, [], trie=trie)
+    # trie-held pages were compacted into the low prefix and remapped
+    assert sorted(trie.pages()) == [1, 2]
+    assert pool.used_pages == 2
+    np.testing.assert_array_equal(before, gathered())
+    nodes, hit = trie.match(list(range(9)))
+    assert hit == 8 and [n.page for n in nodes] == trie.pages()
+    # the ledger check: a live refcount no table and no trie node accounts
+    # for is a leak, reported instead of silently compacted away
+    pool.alloc(1)
+    with pytest.raises(ValueError, match="leak"):
+        defrag(caches, pool, [], trie=trie)
+
+
+def test_evict_one_skips_pinned_chains_when_nothing_reclaimable():
+    """Review regression: under pool pressure with every cached page still
+    shared by live lanes, eviction must report failure (backpressure handles
+    it) instead of draining the hot prefix index for zero freed pages."""
+    from repro.serve.kvcache import PrefixCache
+
+    pool = PagePool(12)
+    trie = PrefixCache(4)
+    a = pool.alloc(2)
+    trie.insert(list(range(8)), a, pool)   # the lane still holds `a`
+    assert trie.reclaimable(pool) == 0
+    assert trie.evict_one(pool) is False
+    assert trie.evict_until(pool, pool.free_pages + 1) is False
+    assert trie.n_pages == 2               # the index survived intact
+    pool.free(a)                           # lane exits → pages reclaimable
+    assert trie.evict_one(pool) is True
+
+
+def test_evict_one_prefers_shielding_leaves_over_hot_chains():
+    """Review regression: when every reclaimable page sits on an interior
+    node, the fallback victim must be a leaf SHIELDING one — never an
+    unrelated hot pinned chain (which would lose its cache for zero freed
+    pages just for being LRU-oldest)."""
+    from repro.serve.kvcache import PrefixCache
+
+    pool = PagePool(12)
+    trie = PrefixCache(4)
+    b = pool.alloc(1)
+    trie.insert([9, 9, 9, 9], b, pool)       # hot chain B: oldest LRU, pinned
+    a = pool.alloc(2)
+    trie.insert(list(range(8)), a, pool)     # chain A: interior a0 → leaf a1
+    pool.free([a[0]])                        # a0 now trie-only (reclaimable)
+    free0 = pool.free_pages
+    assert trie.evict_one(pool)              # unindexes a1 (shields a0) ...
+    assert trie.match([9, 9, 9, 9, 1])[1] == 4   # ... chain B still hits
+    assert pool.free_pages == free0          # a1 was pinned: nothing freed
+    assert trie.evict_one(pool)              # a0 is a reclaimable leaf now
+    assert pool.free_pages == free0 + 1

@@ -1,0 +1,247 @@
+"""Shared-prefix caching over the paged serving runtime.
+
+The load-bearing properties: decoded tokens are bit-identical with the
+cache on or off (greedy, spec on and off) on the same frozen artifact; a
+request sharing a ≥2-page prefix performs zero prefill model work for the
+shared pages (step/token counters); copy-on-write isolates forks of a
+shared prefix; trie eviction converts pool pressure into reclaimed pages
+instead of backpressure; defrag keeps cached prefixes hitting; and a mixed
+admit/preempt/evict/defrag/rollback run leaks nothing and double-frees
+nothing (defrag's refcount-ledger check runs mid-flight)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, reduce_for_smoke
+from repro.core.da import DAConfig
+from repro.core.freeze import freeze_model
+from repro.models.model import init_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import latency_metrics
+from repro.spec import SpecConfig
+
+KEY = jax.random.key(0)
+MAX_NEW = 4
+PS = 8  # page size used throughout: an 18-token shared prefix = 2 full pages
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
+                              moe_dropless=True)
+    params = init_model(KEY, cfg)
+    art = freeze_model(params, DAConfig(x_signed=True),
+                       mode="bitplane_stacked", model_cfg=cfg)
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab, 18)
+    prompts = {u: np.concatenate([shared, rng.integers(0, cfg.vocab, 3 + u)])
+               for u in range(6)}
+    return cfg, params, art, prompts
+
+
+def _run(cfg, params, prompts, prefix_cache, spec=None, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("page_size", PS)
+    eng = ServeEngine(cfg, params, prefix_cache=prefix_cache, spec=spec, **kw)
+    for u, p in prompts.items():
+        eng.submit(Request(uid=u, prompt=p, max_new_tokens=MAX_NEW))
+    done = eng.run()
+    return {u: list(r.generated) for u, r in done.items()}, eng
+
+
+def _spec():
+    return SpecConfig(provider="bitplane", gamma=2, draft_x_bits=6,
+                      disable_below=0.0)
+
+
+def test_tokens_identical_cache_on_off(setup):
+    """Acceptance: with prefix caching ON, decoded tokens are bit-identical
+    to caching OFF on the same frozen artifact (greedy), and the trie
+    actually absorbed the shared prefix."""
+    cfg, _, art, prompts = setup
+    off, _ = _run(cfg, art.params, prompts, False)
+    on, eng = _run(cfg, art.params, prompts, True)
+    assert on == off
+    m = eng.metrics()
+    assert m["prefix_cache"]["cached_tokens"] >= 2 * 16  # ≥2 pages, ≥2 hits
+    assert m["prefix_cache"]["hits"] >= 2
+    assert 0 < m["prefix_cache"]["hit_rate"] < 1
+    # finished requests released everything except the trie's cached pages
+    assert m["pool"]["used_pages"] == m["prefix_cache"]["trie_pages"]
+
+
+def test_tokens_identical_with_spec_and_shared_checkpoints(setup):
+    """Acceptance: identity also holds with speculative decoding on — and
+    with two IDENTICAL prompts in the mix, spec rounds run on lanes whose
+    tables still start with shared pages (checkpoints straddle them); the
+    rollback path must only ever touch exclusively-owned draft growth."""
+    cfg, _, art, prompts = setup
+    prompts = dict(prompts)
+    prompts[6] = prompts[5].copy()  # a full-prompt twin → COW + sharing
+    off, _ = _run(cfg, art.params, prompts, False, spec=_spec())
+    on, eng = _run(cfg, art.params, prompts, True, spec=_spec())
+    assert on == off
+    m = eng.metrics()
+    assert m["spec"]["rounds"] > 0  # speculation actually ran
+    assert m["prefix_cache"]["cached_tokens"] > 0
+    assert m["pool"]["used_pages"] == m["prefix_cache"]["trie_pages"]
+
+
+def test_second_request_zero_prefill_for_shared_pages(setup):
+    """Acceptance: the second of two requests sharing a ≥2-page prefix runs
+    zero prefill model calls for the shared pages — its measured context
+    work is exactly the unshared tail plus decode."""
+    cfg, _, art, _ = setup
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab, 2 * PS)  # exactly 2 full pages
+    eng = ServeEngine(cfg, art.params, batch_size=2, max_len=48,
+                      page_size=PS, prefix_cache=True)
+    eng.submit(Request(uid=0,
+                       prompt=np.concatenate(
+                           [shared, rng.integers(0, cfg.vocab, 6)]),
+                       max_new_tokens=MAX_NEW))
+    eng.run()
+    ctx0 = eng.metrics()["ctx_tokens"]
+    tail = 5
+    eng.submit(Request(uid=1,
+                       prompt=np.concatenate(
+                           [shared, rng.integers(0, cfg.vocab, tail)]),
+                       max_new_tokens=MAX_NEW))
+    eng.run()
+    m = eng.metrics()
+    assert m["prefix_cache"]["cached_tokens"] == 2 * PS
+    # request 1 processed ONLY its tail during prefill (the final generated
+    # token is emitted, never re-fed): not one model call covered a shared
+    # page's tokens
+    assert m["ctx_tokens"] - ctx0 == tail + MAX_NEW - 1
+
+
+def test_cow_divergence_after_shared_prefix_fork(setup):
+    """Two requests with the SAME page-aligned prompt: the hit caps at
+    len-1, landing inside the last shared page, so the second lane's first
+    write copy-on-writes it. Both decodes match the cache-off baseline —
+    the fork never scribbles on the sharer's KV."""
+    cfg, _, art, _ = setup
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab, 2 * PS)
+    prompts = {0: prompt, 1: prompt.copy()}
+    off, _ = _run(cfg, art.params, prompts, False)
+    eng = ServeEngine(cfg, art.params, batch_size=2, max_len=48,
+                      page_size=PS, prefix_cache=True)
+    # serialize so request 1 sees request 0's pages in the trie
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=MAX_NEW))
+    eng.run()
+    eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=MAX_NEW))
+    done = eng.run()
+    assert {u: list(r.generated) for u, r in done.items()} == off
+    m = eng.metrics()
+    assert m["prefix_cache"]["cow_copies"] >= 1
+    assert m["prefix_cache"]["cached_tokens"] == 2 * PS - 1
+    assert m["pool"]["used_pages"] == m["prefix_cache"]["trie_pages"]
+
+
+def test_trie_eviction_under_pool_pressure(setup):
+    """A pool crowded by cached-but-idle prefixes: a new unrelated request
+    reclaims trie pages (LRU) instead of waiting on backpressure forever."""
+    cfg, _, art, _ = setup
+    rng = np.random.default_rng(8)
+    eng = ServeEngine(cfg, art.params, batch_size=1, max_len=32, page_size=4,
+                      n_pages=9, prefix_cache=True)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 16),
+                       max_new_tokens=2))
+    eng.run()
+    assert eng.metrics()["prefix_cache"]["trie_pages"] == 4
+    eng.submit(Request(uid=1, prompt=rng.integers(0, cfg.vocab, 20),
+                       max_new_tokens=4))
+    done = eng.run()
+    assert len(done[1].generated) == 4
+    assert eng.metrics()["prefix_cache"]["evictions"] >= 1
+
+
+def test_defrag_keeps_cached_prefixes_hitting(setup):
+    """Defrag renumbers physical pages; trie-held pages move under the same
+    remap, so later requests still hit and still decode their exact
+    baseline tokens."""
+    cfg, _, art, prompts = setup
+    off, _ = _run(cfg, art.params, prompts, False)
+    eng = ServeEngine(cfg, art.params, batch_size=2, max_len=48,
+                      page_size=PS, prefix_cache=True)
+    for u in (0, 1):
+        eng.submit(Request(uid=u, prompt=prompts[u], max_new_tokens=MAX_NEW))
+    eng.run()
+    eng._rt.defrag()  # also a ledger check: raises on any leaked page
+    cached0 = eng.metrics()["prefix_cache"]["cached_tokens"]
+    for u in (2, 3):
+        eng.submit(Request(uid=u, prompt=prompts[u], max_new_tokens=MAX_NEW))
+    done = eng.run()
+    assert {u: list(done[u].generated) for u in (2, 3)} \
+        == {u: off[u] for u in (2, 3)}
+    assert eng.metrics()["prefix_cache"]["cached_tokens"] - cached0 >= 2 * 16
+
+
+def test_ownership_stress_no_leaks_no_double_frees(setup):
+    """Acceptance: a mixed admit/preempt/evict/defrag/rollback run over a
+    tight pool with sharing AND speculation on — tokens stay exactly the
+    baseline's, the periodic defrag ledger check never finds a leak, and at
+    the end every page is accounted for (lanes empty, trie holds the rest,
+    clearing the trie drains the pool to zero)."""
+    cfg, _, art, prompts = setup
+    off, _ = _run(cfg, art.params, prompts, False, spec=_spec())
+    eng = ServeEngine(cfg, art.params, batch_size=3, max_len=48, page_size=4,
+                      n_pages=12, admission="optimistic", prefill_chunk=4,
+                      prefix_cache=True, spec=_spec())
+    for u, p in prompts.items():
+        eng.submit(Request(uid=u, prompt=p, max_new_tokens=MAX_NEW))
+    ticks = 0
+    while eng.step() or eng.queue:
+        ticks += 1
+        if ticks % 5 == 0:
+            eng._rt.defrag()
+    assert {u: list(r.generated) for u, r in eng.done.items()} == off
+    sched = eng._rt
+    m = eng.metrics()
+    assert m["pool"]["used_pages"] == m["prefix_cache"]["trie_pages"]
+    sched.prefix.clear(sched.pool)
+    assert sched.pool.used_pages == 0
+    assert sum(sched.pool._ref) == 0  # not one dangling reference
+
+
+def test_latency_metrics_counts_zero_epoch_first_token():
+    """Regression: a first token stamped at wall-clock 0.0 exactly used to
+    be dropped by truthiness; and an all-unfinished set must yield zeroed
+    keys, not a crash."""
+    r = Request(uid=0, prompt=np.arange(3), submit_t=-0.05)
+    r.first_token_t = 0.0
+    r.token_times = [0.0, 0.01]
+    m = latency_metrics([r])
+    assert m["ttft_p50_ms"] == pytest.approx(50.0)
+    assert m["itl_p50_ms"] == pytest.approx(10.0)
+    fresh = Request(uid=1, prompt=np.arange(3))  # no token landed yet
+    assert latency_metrics([fresh]) == {
+        "ttft_p50_ms": 0.0, "itl_p50_ms": 0.0, "itl_p99_ms": 0.0}
+    assert latency_metrics([]) == {
+        "ttft_p50_ms": 0.0, "itl_p50_ms": 0.0, "itl_p99_ms": 0.0}
+
+
+def test_slot_runtime_rejects_prefix_cache(setup):
+    cfg, params, _, _ = setup
+    with pytest.raises(ValueError, match="prefix"):
+        ServeEngine(cfg, params, batch_size=2, max_len=16, runtime="slots",
+                    prefix_cache=True)
+
+
+def test_from_artifact_plumbs_prefix_cache(setup, tmp_path):
+    from repro.core.freeze import save_artifact
+
+    cfg, _, art, prompts = setup
+    d = save_artifact(str(tmp_path / "art"), art)
+    eng = ServeEngine.from_artifact(d, batch_size=2, max_len=48,
+                                    page_size=PS, prefix_cache=True)
+    assert eng._rt.prefix is not None
+    for u in (0, 1):
+        eng.submit(Request(uid=u, prompt=prompts[u], max_new_tokens=2))
+    eng.run()
+    assert eng.metrics()["prefix_cache"]["lookups"] == 2
