@@ -83,6 +83,11 @@ def main():
                     help="shared-prefix caching: requests sharing a prompt "
                          "prefix (the demo gives every request one) reuse "
                          "its KV pages instead of re-prefilling them")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=["auto", "gather", "fused"],
+                    help="paged-attention read: XLA gather or the fused "
+                         "Pallas page-walk kernel (auto picks per shape "
+                         "bucket; tokens identical either way)")
     ap.add_argument("--spec", default=None,
                     choices=["bitplane", "layerskip"],
                     help="self-speculative decoding: draft with a truncated-"
@@ -115,7 +120,8 @@ def main():
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
                                         max_len=96, runtime=args.runtime,
                                         page_size=args.page_size, spec=spec,
-                                        prefix_cache=args.prefix_cache)
+                                        prefix_cache=args.prefix_cache,
+                                        paged_attn=args.paged_attn)
         cfg = eng.cfg
         print(f"cold boot from {args.artifact} in "
               f"{time.perf_counter()-t0:.1f}s (zero float weights, "
@@ -129,7 +135,8 @@ def main():
         eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=96,
                           da_mode=args.mode,  # per-layer planned freeze
                           runtime=args.runtime, page_size=args.page_size,
-                          spec=spec, prefix_cache=args.prefix_cache)
+                          spec=spec, prefix_cache=args.prefix_cache,
+                          paged_attn=args.paged_attn)
         if args.mode != "float":
             print(f"pre-VMM freeze ({args.mode}) in "
                   f"{time.perf_counter()-t0:.1f}s:")

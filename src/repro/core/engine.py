@@ -388,8 +388,9 @@ def _stacked_backend(xq, packed, cfg):
 def _pallas_bitplane_backend(xq, packed, cfg):
     from repro.kernels.ops import bitplane_vmm as _kernel_bitplane_vmm
 
-    return _kernel_bitplane_vmm(xq, packed.wq.astype(jnp.int32), cfg,
-                                backend="pallas")
+    # int8 storage passes through uncast: the kernel sizes its fp32-exact K
+    # tile from the storage dtype (a pre-cast int32 tracer would hide it).
+    return _kernel_bitplane_vmm(xq, packed.wq, cfg, backend="pallas")
 
 
 @register_backend(
@@ -513,10 +514,13 @@ def load_cost_table(path: Optional[os.PathLike] = None) -> Dict[str, Dict[str, f
             entries = {}
         for bucket, costs in entries.items():
             if isinstance(costs, dict):
-                unknown.update(b for b in costs if b not in _REGISTRY)
+                # "attn:*" buckets rank attention-read backends, the rest
+                # rank DA VMM backends — each filtered against its registry.
+                reg = _ATTN_REGISTRY if bucket.startswith("attn:") else _REGISTRY
+                unknown.update(b for b in costs if b not in reg)
                 table[bucket] = {
                     b: float(us) for b, us in costs.items()
-                    if b in _REGISTRY and isinstance(us, (int, float))
+                    if b in reg and isinstance(us, (int, float))
                 }
         if unknown:
             warnings.warn(
@@ -781,3 +785,200 @@ def dense(x: jax.Array, w) -> jax.Array:
     if w.ndim == 3 and x.ndim == 3:
         return jnp.einsum("ecd,edf->ecf", x, w)
     return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention read backends — the decode-attention analogue of the DA
+# registry.  The paged runtime has two interchangeable executions of the same
+# attention read over the page pool; dispatch picks per shape bucket.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnBackendSpec:
+    """One execution of the paged-attention read.
+
+    fn: ``(q [B,T,H,hd], k_pool, v_pool [P,ps,kv,hd], page_table [B,W],
+    tpos [B,T], *, softmax_dtype, mask_mode) → [B,T,H,hd]`` — the attention
+    context over an already-written pool, ragged-masked by ``tpos``.
+    """
+
+    name: str
+    fn: Callable[..., jax.Array]
+    description: str = ""
+
+
+_ATTN_REGISTRY: Dict[str, AttnBackendSpec] = {}
+
+
+def register_attn_backend(name: str, **caps):
+    """Decorator: register a paged-attention read under ``name``."""
+
+    def deco(fn):
+        if name in _ATTN_REGISTRY:
+            raise ValueError(f"attention backend {name!r} already registered")
+        _ATTN_REGISTRY[name] = AttnBackendSpec(name=name, fn=fn, **caps)
+        return fn
+
+    return deco
+
+
+def registered_attn_backends() -> Dict[str, AttnBackendSpec]:
+    """Name → spec of every paged-attention read (differential-test sweep)."""
+    return dict(_ATTN_REGISTRY)
+
+
+def get_attn_backend(mode: str) -> AttnBackendSpec:
+    if mode not in _ATTN_REGISTRY:
+        raise ValueError(
+            f"unknown paged-attention backend {mode!r}; registered: "
+            f"{', '.join(sorted(_ATTN_REGISTRY))} (plus 'auto' for "
+            "cost-table / platform dispatch)"
+        )
+    return _ATTN_REGISTRY[mode]
+
+
+def attn_shape_bucket(batch: int, t: int, kv_len: int) -> str:
+    """Fold a paged-attention call shape into a coarse cost-table key.
+
+    Namespaced ``attn:`` so the same autotune JSON can carry VMM buckets and
+    attention buckets side by side.  T buckets decode-like steps (plain
+    decode and spec draft/verify staging, T ≤ 8) apart from prefill chunks;
+    the KV extent (table width · page size) buckets the read volume.
+    """
+    phase = "dec" if t <= 8 else "pre"
+    kb = "s" if kv_len <= 256 else ("m" if kv_len <= 2048 else "l")
+    return f"attn:{phase}:{kb}"
+
+
+def select_attn_backend(mode: Optional[str], *, batch: int, t: int,
+                        kv_len: int) -> str:
+    """Resolve a ``cfg.paged_attn`` mode to a registered backend name.
+
+    ``"auto"`` reads the autotune cost table's ``attn:*`` bucket for this
+    shape (populated by ``benchmarks/paged_decode.py``); untimed buckets fall
+    back to the platform heuristic — the fused Pallas walk on TPU, the XLA
+    gather read elsewhere (off-TPU the kernel runs in interpreter mode, a
+    correctness tool rather than a fast path).
+    """
+    mode = "auto" if mode is None else mode
+    if mode != "auto":
+        return get_attn_backend(mode).name
+    costs = load_cost_table().get(attn_shape_bucket(batch, t, kv_len), {})
+    timed = {n: c for n, c in costs.items() if n in _ATTN_REGISTRY}
+    if timed:
+        return min(timed, key=timed.get)
+    return "fused" if jax.default_backend() == "tpu" else "gather"
+
+
+@register_attn_backend(
+    "gather",
+    description="XLA read: page-table gather to [B,S,kv,hd] + masked softmax",
+)
+def _gather_attn_backend(q, k_pool, v_pool, page_table, tpos, **kw):
+    from repro.models.attention import paged_gather_read
+
+    return paged_gather_read(q, k_pool, v_pool, page_table, tpos, **kw)
+
+
+@register_attn_backend(
+    "fused",
+    description="Pallas kernel: in-kernel page walk + online softmax "
+    "(interpret off-TPU)",
+)
+def _fused_attn_backend(q, k_pool, v_pool, page_table, tpos, **kw):
+    from repro.kernels.paged_attention import paged_attention
+
+    return paged_attention(q, k_pool, v_pool, page_table, tpos, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fused QKV projection — one DA pass per layer over three PackedWeights
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg", "backends", "x_bits_eff", "splits"))
+def _da_qkv_jit(x2, packs, cfg, backends, x_bits_eff, splits):
+    xqt = quantize_acts_signed(x2, bits=cfg.x_bits)
+    xq, rcfg, drop = truncate_codes(xqt.q, cfg, x_bits_eff)
+    if len(set(backends)) == 1 and not _REGISTRY[backends[0]].needs_luts:
+        # One storage-free backend serves all three: concatenate the code
+        # matrices on N and run ONE integer VMM.  Each output column is an
+        # independent exact integer dot, so the split accumulators are the
+        # very integers three separate calls would produce.
+        merged = PackedWeights(
+            wq=jnp.concatenate([p.wq for p in packs], axis=-1),
+            w_scale=jnp.ones((1, 1), jnp.float32), luts=None,
+            cfg=cfg, mode=backends[0],
+        )
+        accs = jnp.split(_REGISTRY[backends[0]].fn(xq, merged, rcfg),
+                         list(splits), axis=-1)
+    else:
+        accs = [_REGISTRY[b].fn(xq, p, rcfg) for b, p in zip(backends, packs)]
+    outs = []
+    for acc, p in zip(accs, packs):
+        if drop:
+            acc = acc * (1 << drop)
+        outs.append(acc.astype(jnp.float32) * xqt.scale * p.w_scale)
+    return tuple(outs)
+
+
+def da_qkv_matmul(
+    x: jax.Array,
+    packs,
+    cfg: Optional[DAConfig] = None,
+    mode: Optional[str] = None,
+    x_bits_eff: Optional[int] = None,
+):
+    """Fused multi-head projection: one DA pass over several PackedWeights.
+
+    ``x [.., K]`` against ``packs`` (e.g. the q/k/v artifacts of one layer,
+    all packed under one DAConfig with the same K).  The activations are
+    quantized and bit-plane-decomposed ONCE, and when every matrix resolves
+    to the same storage-free backend the three VMMs run as a single
+    concatenated pass — the weights stream through the datapath once per
+    decode step instead of three times.  Outputs are BIT-IDENTICAL to
+    separate :func:`da_matmul` calls: shared quantization is the same
+    quantization, the integer backends are exact, and dequantization is
+    per-column.  Returns a tuple of ``[.., N_i]`` float arrays.
+
+    ``x_bits_eff`` / the :func:`x_bits_override` context truncate the shared
+    codes exactly as in :func:`da_matmul` (the draft pass fuses too).
+    """
+    packs = tuple(packs)
+    if not packs:
+        raise ValueError("da_qkv_matmul needs at least one PackedWeights")
+    base = cfg if cfg is not None else packs[0].cfg
+    for p in packs:
+        if not isinstance(p, PackedWeights) or p.wq.ndim != 2:
+            raise ValueError("da_qkv_matmul fuses 2-D PackedWeights only")
+        if cfg is None and p.cfg != base:
+            raise ValueError(
+                "da_qkv_matmul: packs disagree on DAConfig — pass cfg= to "
+                "override, or fall back to separate da_matmul calls"
+            )
+        if p.k != packs[0].k:
+            raise ValueError(
+                f"da_qkv_matmul: contraction dims differ ({p.k} vs "
+                f"{packs[0].k})"
+            )
+    scfg = dataclasses.replace(base, x_signed=True)
+    eff = effective_x_bits(scfg, x_bits_eff)
+    rcfg = dataclasses.replace(scfg, x_bits=eff)  # dispatch sees draft cycles
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    m = 1
+    for d in lead:
+        m *= int(d)
+    backends = []
+    for p in packs:
+        spec = _resolve_spec(mode, m, p.k, p.n, rcfg, p.has_luts,
+                             default_mode=p.mode)
+        _check_lut_shape(spec, p, rcfg)
+        backends.append(spec.name)
+    splits = []
+    for p in packs[:-1]:
+        splits.append((splits[-1] if splits else 0) + p.n)
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    ys = _da_qkv_jit(x2, packs, scfg, tuple(backends), eff, tuple(splits))
+    return tuple(y.reshape(lead + (p.n,)) for y, p in zip(ys, packs))

@@ -76,13 +76,15 @@ def da_vmm_pallas(
     bm: int = 256,
     bn: int = 256,
     bg: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """DA VMM via Pallas. xq [M, K] int32 codes; luts [G, 2^L, N] int32.
 
-    Returns int32 [M, N] == xq @ W exactly. ``interpret=True`` executes the
-    kernel body on CPU (this container); on TPU pass ``interpret=False``.
+    Returns int32 [M, N] == xq @ W exactly. ``interpret=None`` derives the
+    execution mode from the platform: compiled on TPU, interpret elsewhere.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, k = xq.shape
     g, r, n = luts.shape
     l = cfg.group_size

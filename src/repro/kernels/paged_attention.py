@@ -1,0 +1,192 @@
+"""Fused Pallas paged-attention decode kernel: in-kernel page-table walk.
+
+The serving gather path (``models/attention.paged_gather_read``) re-creates
+the full ``[B, W*ps, kv, hd]`` KV view from the batch-free page pool every
+decode step — an HBM gather whose traffic dwarfs the attention math at
+decode shapes. This kernel walks the page table ON-CHIP instead: the grid is
+(batch row, page slot) and the K/V BlockSpec index maps read the
+scalar-prefetched page table, so each grid step DMAs exactly ONE physical
+page into VMEM. Pages the table does not name are never touched, and the
+dense ``[B, S, kv, hd]`` view never exists in HBM.
+
+Per page the kernel computes that page's grouped-GQA score block (q stays in
+its ``[kv, G]`` grouped layout; repeated KV heads are never materialized)
+and folds it into a running row-max — the online-softmax accumulation
+across the page walk. Masked scores and the page's V rows are staged in
+VMEM scratch, which Pallas persists across the sequential grid. The final
+page's step runs the fused epilogue: exp/normalize against the accumulated
+max, probs cast, PV contraction — one kernel, no HBM round-trip for scores.
+
+Ragged masking happens in-kernel: key position ``w*ps + i`` contributes to
+query ``t`` iff ``kpos <= tpos[b, t]``. Pad lanes point at the garbage page
+(physical page 0) with ``tpos`` beyond every real position, so garbage rows
+are masked out exactly as in the gather path.
+
+Numerics match the gather path BIT-FOR-BIT at the default
+``softmax_dtype="float32"`` (CI asserts it, the same way the paged==dense
+tests do): each page's score block is a slice of the same einsum the gather
+path runs, the running max equals the global masked max exactly (max is
+order-independent), and the epilogue replicates ``jax.nn.softmax``'s
+``exp(x - max) / sum`` form with the same dtypes and casts. Deferring
+exp/normalize to the epilogue — rather than rescaling a running sum at
+every page like a classic flash-decode kernel — is what keeps the
+roundings identical; the rescale chain would round differently at each page
+boundary. The cost is VMEM scratch linear in the table width, which at
+serving page counts is far below the VMEM budget. For sub-f32 softmax
+dtypes (``softmax_dtype="bfloat16"``) exact bit-parity across lowerings is
+not attainable in principle — XLA fuses ``exp``+``reduce`` and keeps f32
+intermediates across the pair, eliding bf16 roundings an op-by-op kernel
+must perform — so there the kernel is within one bf16 ulp per reduction,
+not bitwise.
+
+``interpret=None`` derives the execution mode from the backend platform:
+compiled on TPU, interpreter everywhere else (the CPU CI correctness path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Matches models/attention.NEG_INF so masked lanes are bit-identical.
+NEG_INF = -1e30
+
+
+def _default_interpret() -> bool:
+    """Platform-derived execution mode: compiled on TPU, interpret elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+def _paged_attn_kernel(
+    table_ref,  # scalar-prefetch: [B, W] page table (SMEM)
+    q_ref,      # [1, T, H, hd] query block for this batch row
+    tpos_ref,   # [1, T] temporal positions for this batch row
+    k_ref,      # [1, ps, kv, hd] — ONE physical K page, chosen by the table
+    v_ref,      # [1, ps, kv, hd] — ONE physical V page
+    o_ref,      # [1, T, H, hd] output block
+    s_scr,      # VMEM [kv, G, T, S] masked scores, staged across the walk
+    v_scr,      # VMEM [S, kv, hd] gathered V rows
+    m_scr,      # VMEM [kv, G, T] running row max
+    *,
+    n_pages_walked: int,
+    page_size: int,
+    n_kv: int,
+    n_groups: int,
+    softmax_dtype,
+    mask_mode: str,
+):
+    del table_ref  # consumed by the BlockSpec index maps
+    wi = pl.program_id(1)
+    ps = page_size
+    t = q_ref.shape[1]
+    hd = q_ref.shape[3]
+    sd = softmax_dtype
+
+    # Stage this page's V rows at their logical offset in the sequence.
+    v_scr[pl.ds(wi * ps, ps)] = v_ref[0]
+
+    # Grouped-GQA scores for this page: slice of the gather path's einsum
+    # over the same contraction (hd), so it is bitwise the same block.
+    qg = q_ref[0].reshape(t, n_kv, n_groups, hd)[None]
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k_ref[...]) / (hd ** 0.5)
+    scores = scores.astype(sd)
+
+    # Ragged/garbage masking: key position valid iff kpos <= tpos.
+    kpos = wi * ps + jax.lax.broadcasted_iota(jnp.int32, (t, ps), 1)
+    valid = (kpos <= tpos_ref[0][:, None])[None, None, None]
+    neg = jnp.asarray(NEG_INF, sd)
+    if mask_mode == "additive":
+        scores = scores + jnp.where(valid, jnp.asarray(0.0, sd), neg)
+    else:
+        scores = jnp.where(valid, scores, neg)
+    s_scr[:, :, :, pl.ds(wi * ps, ps)] = scores[0]
+
+    # Online accumulation: running max over pages == global max, exactly.
+    page_max = jnp.max(scores[0], axis=-1)
+
+    @pl.when(wi == 0)
+    def _init():
+        m_scr[...] = page_max
+
+    @pl.when(wi > 0)
+    def _fold():
+        m_scr[...] = jnp.maximum(m_scr[...], page_max)
+
+    @pl.when(wi == n_pages_walked - 1)
+    def _epilogue():
+        # Mirror jax.nn.softmax(scores, axis=-1) bit-for-bit:
+        # exp(x - max) / sum, in softmax_dtype, then cast to q dtype.
+        s_all = s_scr[...]
+        unnorm = jnp.exp(s_all - m_scr[...][..., None])
+        probs = unnorm / jnp.sum(unnorm, axis=-1, keepdims=True)
+        probs = probs.astype(q_ref.dtype)[None]
+        out = jnp.einsum("bkgts,bskd->btkgd", probs, v_scr[...][None])
+        o_ref[...] = out.reshape(1, t, n_kv * n_groups, hd).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jax.Array,           # [B, T, H, hd]
+    k_pool: jax.Array,      # [n_pages, ps, kv, hd]
+    v_pool: jax.Array,      # [n_pages, ps, kv, hd]
+    page_table: jax.Array,  # [B, W] int32 physical page ids
+    tpos: jax.Array,        # [B, T] int32 temporal positions (pad -> pad_pos)
+    *,
+    softmax_dtype="float32",
+    mask_mode: str = "where",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused paged-attention read: returns ``[B, T, H, hd]`` context.
+
+    Drop-in replacement for the gather read over an already-written pool
+    (scatter of the current step's K/V happens before either read). The
+    page walk, ragged masking, online-softmax accumulation and PV
+    contraction all run inside one Pallas kernel; see the module docstring
+    for the bit-parity argument.
+    """
+    b, t, h, hd = q.shape
+    _, ps, kv, _ = k_pool.shape
+    w = page_table.shape[1]
+    s = w * ps
+    if h % kv:
+        raise ValueError(f"n_heads={h} not divisible by n_kv_heads={kv}")
+    g = h // kv
+    if interpret is None:
+        interpret = _default_interpret()
+    sd = jnp.dtype(softmax_dtype)
+
+    kernel = functools.partial(
+        _paged_attn_kernel,
+        n_pages_walked=w,
+        page_size=ps,
+        n_kv=kv,
+        n_groups=g,
+        softmax_dtype=sd,
+        mask_mode=mask_mode,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, w),
+        in_specs=[
+            pl.BlockSpec((1, t, h, hd), lambda bi, wi, tbl: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, t), lambda bi, wi, tbl: (bi, 0)),
+            # The page walk: block index = table entry for (row, slot).
+            pl.BlockSpec((1, ps, kv, hd), lambda bi, wi, tbl: (tbl[bi, wi], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kv, hd), lambda bi, wi, tbl: (tbl[bi, wi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, h, hd), lambda bi, wi, tbl: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g, t, s), sd),
+            pltpu.VMEM((s, kv, hd), v_pool.dtype),
+            pltpu.VMEM((kv, g, t), sd),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, tpos.astype(jnp.int32), k_pool, v_pool)

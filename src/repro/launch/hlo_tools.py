@@ -45,6 +45,19 @@ def bytes_by_op_kind(hlo_text: str, k: int = 20) -> List[Tuple[str, int, int]]:
     return sorted(rows, key=lambda t: -t[1])[:k]
 
 
+def ops_of_kind(hlo_text: str, kind: str) -> List[Tuple[str, int]]:
+    """Every op of one HLO kind, fusion bodies included: (name, result
+    bytes), largest first.  E.g. ``ops_of_kind(txt, "gather")`` checks a
+    lowering for full-page-table KV gathers — the fused paged-attention
+    path must not contain one at the [B, W·ps, kv, hd] view size."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m and m.group(3) == kind:
+            out.append((m.group(1), _shape_bytes(m.group(2))))
+    return sorted(out, key=lambda t: -t[1])
+
+
 def top_ops(hlo_text: str, k: int = 20) -> List[Tuple[str, str, int]]:
     """Largest individual op results (fusion outputs usually dominate)."""
     out = []

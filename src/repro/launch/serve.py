@@ -46,6 +46,11 @@ def main():
                     help="shared-prefix caching: requests sharing a prompt "
                          "prefix reuse its KV pages (refcounted, COW; "
                          "tokens identical to caching off)")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=["auto", "gather", "fused"],
+                    help="paged-attention read: XLA gather or the fused "
+                         "Pallas page-walk kernel (auto picks per shape "
+                         "bucket; tokens identical either way)")
     ap.add_argument("--spec", default=None,
                     choices=["bitplane", "layerskip", "artifact"],
                     help="speculative decoding draft provider (paged runtime; "
@@ -94,7 +99,8 @@ def main():
                                         max_len=args.max_len,
                                         runtime=args.runtime,
                                         page_size=args.page_size, spec=spec,
-                                        prefix_cache=args.prefix_cache)
+                                        prefix_cache=args.prefix_cache,
+                                        paged_attn=args.paged_attn)
         cfg = eng.cfg
         print(f"arch={cfg.name} cold boot from {args.artifact} "
               f"(zero float weights, runtime={eng.runtime})")
@@ -117,7 +123,8 @@ def main():
         eng = ServeEngine(cfg, params, batch_size=args.batch,
                           max_len=args.max_len, da_mode=mode,
                           runtime=args.runtime, page_size=args.page_size,
-                          spec=spec, prefix_cache=args.prefix_cache)
+                          spec=spec, prefix_cache=args.prefix_cache,
+                          paged_attn=args.paged_attn)
         if mode is not None:
             rep = da_memory_report(eng.params)
             print(f"pre-VMM freeze: {rep['da_matrices']} matrices"

@@ -7,6 +7,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import PackedWeights as _Packed
+from repro.core.engine import da_qkv_matmul
 from repro.core.linear import dense
 from repro.launch.sharding import constrain
 from repro.models.config import ModelConfig
@@ -77,12 +79,32 @@ def init_attention(key, cfg: ModelConfig):
     return p
 
 
+def _fusable_qkv(*ws) -> bool:
+    """The q/k/v artifacts can share one DA pass: all PackedWeights, 2-D,
+    one DAConfig, one contraction dim (always true for a frozen attention
+    layer; MoE-stacked or mixed float/packed params fall back)."""
+    return (
+        all(isinstance(w, _Packed) and w.wq.ndim == 2 for w in ws)
+        and len({w.cfg for w in ws}) == 1
+        and len({w.k for w in ws}) == 1
+    )
+
+
 def _project_qkv(p, x, cfg: ModelConfig, positions):
     b, t, _ = x.shape
     hd = cfg.head_dim_
-    q = dense(x, p["wq"]) + (p.get("bq", 0))
-    k = dense(x, p["wk"]) + (p.get("bk", 0))
-    v = dense(x, p["wv"]) + (p.get("bv", 0))
+    if _fusable_qkv(p["wq"], p["wk"], p["wv"]):
+        # Frozen DA layer: quantize/decompose the activations once and run
+        # the three projections as one fused engine pass (bit-identical to
+        # the separate dense() calls — see da_qkv_matmul).
+        yq, yk, yv = da_qkv_matmul(x, (p["wq"], p["wk"], p["wv"]))
+        q = yq.astype(x.dtype) + (p.get("bq", 0))
+        k = yk.astype(x.dtype) + (p.get("bk", 0))
+        v = yv.astype(x.dtype) + (p.get("bv", 0))
+    else:
+        q = dense(x, p["wq"]) + (p.get("bq", 0))
+        k = dense(x, p["wk"]) + (p.get("bk", 0))
+        v = dense(x, p["wv"]) + (p.get("bv", 0))
     q = q.reshape(b, t, cfg.n_heads, hd)
     k = k.reshape(b, t, cfg.n_kv_heads, hd)
     v = v.reshape(b, t, cfg.n_kv_heads, hd)
@@ -125,21 +147,26 @@ def _gqa_out(probs, v):
     return out.reshape(b, t, kv * g, v.shape[-1])
 
 
-def _apply_mask_softmax(scores, mask, cfg: ModelConfig):
-    """Mask + softmax with the configured §Perf levers.
+def _masked_softmax(scores, mask, softmax_dtype, mask_mode: str):
+    """Mask + softmax with the §Perf levers, cfg-free (the engine's
+    paged-attention backends pass the levers as plain arguments).
 
     L3a additive: one fused add of a ±0/−inf bias instead of compare+select
     (one fewer full-tensor pass, no bool materialization).
     L3b softmax_dtype: bf16 score pipeline halves every pass's bytes; the
     row-max subtraction keeps it stable (|exp arg| ≤ ~40 in bf16)."""
-    sd = jnp.dtype(cfg.softmax_dtype)
+    sd = jnp.dtype(softmax_dtype)
     scores = scores.astype(sd)
-    if cfg.attn_mask_mode == "additive":
+    if mask_mode == "additive":
         bias = jnp.where(mask, jnp.array(0.0, sd), jnp.array(NEG_INF, sd))
         scores = scores + bias
     else:
         scores = jnp.where(mask, scores, jnp.array(NEG_INF, sd))
     return jax.nn.softmax(scores, axis=-1)
+
+
+def _apply_mask_softmax(scores, mask, cfg: ModelConfig):
+    return _masked_softmax(scores, mask, cfg.softmax_dtype, cfg.attn_mask_mode)
 
 
 def _decode_attention(q, k, v, mask, cfg: ModelConfig):
@@ -236,19 +263,46 @@ def _chunked_attention(q, k, v, q_offset: int, chunk: int, unroll: bool = False)
     return out.transpose(0, 2, 1, 3)  # [B,T,H,hd]
 
 
+def paged_gather_read(q, k_pool, v_pool, page_table, tpos, *,
+                      softmax_dtype="float32", mask_mode: str = "where"):
+    """Gather-based paged-attention read (the ``"gather"`` engine backend).
+
+    Gathers each row's page table back into a contiguous ``[B, S, kv, hd]``
+    view of the batch-free pool and runs masked grouped-GQA attention over
+    it — the XLA-native execution the fused Pallas kernel is measured
+    against. ``kpos <= tpos`` masks unwritten cache, pad lanes and the
+    garbage column in one comparison.
+    """
+    b = q.shape[0]
+    kg = k_pool[page_table].reshape(b, -1, k_pool.shape[-2], k_pool.shape[-1])
+    vg = v_pool[page_table].reshape(b, -1, v_pool.shape[-2], v_pool.shape[-1])
+    kg = constrain(kg, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    vg = constrain(vg, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    kpos = jnp.arange(kg.shape[1])
+    mask = kpos[None, None, :] <= tpos[:, :, None]    # [B, T, S] causal+length
+    scores = _gqa_scores(q, kg)
+    probs = _masked_softmax(scores, mask[:, None, None], softmax_dtype,
+                            mask_mode).astype(q.dtype)
+    return _gqa_out(probs, vg)
+
+
 def _paged_attention(q, k, v, cache: PagedKVCache, page_table, tpos,
                      cfg: ModelConfig):
-    """Page-table-indexed cache write + gather-based attention read.
+    """Page-table-indexed cache write + backend-dispatched attention read.
 
     Writes each token's K/V row at ``(page_table[b, pos // ps], pos % ps)``
-    in the batch-free pool, then gathers the row's table back into a
-    contiguous ``[B, S, kv, hd]`` view and runs the masked decode attention
-    over it. One code path serves decode (T=1), chunked prefill (T=chunk,
-    earlier chunks visible through the gather) and any coalesced mix —
-    pad lanes carry positions inside the garbage column, whose logical
-    positions exceed every real ``tpos``, so ``kpos <= tpos`` masks them out
-    of real rows exactly as it masks unwritten cache beyond a row's length.
+    in the batch-free pool, then runs the attention read through the engine's
+    paged-attention backend registry — ``cfg.paged_attn`` picks the XLA
+    gather read or the fused Pallas page-walk kernel (``"auto"`` defers to
+    the autotune cost table / platform heuristic per shape bucket). One code
+    path serves decode (T=1), chunked prefill (T=chunk, earlier chunks
+    visible through the pool) and any coalesced mix — pad lanes carry
+    positions inside the garbage column, whose logical positions exceed
+    every real ``tpos``, so ``kpos <= tpos`` masks them out of real rows
+    exactly as it masks unwritten cache beyond a row's length.
     """
+    from repro.core.engine import get_attn_backend, select_attn_backend
+
     b, t = tpos.shape
     ps = cache.page_size
     b_idx = jnp.arange(b)[:, None]
@@ -259,14 +313,13 @@ def _paged_attention(q, k, v, cache: PagedKVCache, page_table, tpos,
     ck = constrain(ck, ("page", "page_slot", "kv_heads", "head_dim"))
     cv = constrain(cv, ("page", "page_slot", "kv_heads", "head_dim"))
     new_cache = PagedKVCache(k=ck, v=cv)
-    # gather-based read: [B, W, ps, kv, hd] → contiguous [B, W·ps, kv, hd]
-    kg = ck[page_table].reshape(b, -1, ck.shape[-2], ck.shape[-1])
-    vg = cv[page_table].reshape(b, -1, cv.shape[-2], cv.shape[-1])
-    kg = constrain(kg, ("batch", "kv_seq", "kv_heads", "head_dim"))
-    vg = constrain(vg, ("batch", "kv_seq", "kv_heads", "head_dim"))
-    kpos = jnp.arange(kg.shape[1])
-    mask = kpos[None, None, :] <= tpos[:, :, None]    # [B, T, S] causal+length
-    y = _decode_attention(q, kg, vg, mask, cfg)
+    name = select_attn_backend(getattr(cfg, "paged_attn", "auto"),
+                               batch=b, t=t,
+                               kv_len=page_table.shape[1] * ps)
+    y = get_attn_backend(name).fn(
+        q, ck, cv, page_table, tpos,
+        softmax_dtype=cfg.softmax_dtype, mask_mode=cfg.attn_mask_mode,
+    )
     return y, new_cache
 
 
@@ -316,8 +369,27 @@ def attention_forward(
         cv = constrain(cv, ("batch", "kv_seq", "kv_heads", "head_dim"))
         new_cache = KVCache(k=ck, v=cv, length=cache.length + t)
         if update_cache and t > 1:
-            # prefill: attend within the fresh segment only (cache was empty)
-            pass
+            # Prefill: the segment attention below sees ONLY the fresh
+            # segment, so it is correct iff the cache was empty. A second
+            # chunk against a warm dense cache would silently attend past
+            # nothing before itself — error instead of returning garbage.
+            # (cache.length is concrete on the eager path; under jit it is
+            # a tracer and the fresh-cache invariant is the caller's
+            # contract, as in the slot runtime's in-trace prefill.)
+            try:
+                warm = int(cache.length) > 0
+            except (jax.errors.ConcretizationTypeError,
+                    jax.errors.TracerIntegerConversionError, TypeError):
+                warm = False
+            if warm:
+                raise ValueError(
+                    "chunked prefill into a warm dense KVCache is not "
+                    f"supported: the cache already holds {int(cache.length)} "
+                    "tokens the fresh-segment attention cannot see. Prefill "
+                    "the whole prompt in one call, or use the paged runtime "
+                    "(PagedKVCache), whose attention read covers earlier "
+                    "chunks through the page pool."
+                )
         else:
             # decode: attend over the whole cache with a per-row length mask
             s = ck.shape[1]

@@ -75,6 +75,10 @@ class ModelConfig:
     cache_mode: str = "scatter"       # L9: scatter (ragged rows, general) |
                                       # slice (uniform positions — GSPMD-local
                                       # dynamic_update_slice, no gather)
+    paged_attn: str = "auto"          # paged-attention read: auto (cost-table
+                                      # / platform dispatch) | gather (XLA
+                                      # page-table gather) | fused (Pallas
+                                      # in-kernel page walk)
 
     # ---- derived ------------------------------------------------------------
     @property

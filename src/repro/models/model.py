@@ -132,7 +132,10 @@ def forward(
 
     page_table: int32 [B, W] physical-page ids when ``caches`` hold
     PagedKVCache pools (the serving runtime's paged layout); loop-invariant
-    across the layer scan, like the hoisted causal bias.
+    across the layer scan, like the hoisted causal bias.  How the paged
+    read executes — the XLA gather or the fused Pallas page-walk kernel —
+    is ``cfg.paged_attn``, resolved per shape bucket by the engine's
+    attention-backend registry (``core.engine.select_attn_backend``).
 
     last_idx: int32 [B] — per-row index of the last *real* token; the hidden
     state is gathered there before the LM head (the ragged-batch

@@ -280,7 +280,13 @@ class ServeEngine:
         admission: str = "reserve",
         spec=None,
         prefix_cache: bool = False,
+        paged_attn: Optional[str] = None,
     ):
+        # paged_attn: the paged-attention read backend — "gather" (XLA
+        # page-table gather), "fused" (Pallas in-kernel page walk; interpret
+        # mode off-TPU) or "auto" (cost-table / platform dispatch per shape
+        # bucket).  None inherits cfg.paged_attn.  Decoded tokens are
+        # bit-identical across backends at the default float32 softmax.
         # spec: speculative decoding over the paged runtime — a
         # repro.spec.SpecConfig, or a provider-name shorthand
         # ("bitplane" | "layerskip" | "artifact" → defaults).  Drafts gamma
@@ -331,9 +337,15 @@ class ServeEngine:
                 greedy=greedy, page_size=page_size, n_pages=n_pages,
                 prefill_chunk=prefill_chunk, prefill_lanes=prefill_lanes,
                 token_budget=token_budget, admission=admission, spec=spec,
-                prefix_cache=prefix_cache,
+                prefix_cache=prefix_cache, paged_attn=paged_attn,
             )
         elif runtime == "slots":
+            if paged_attn not in (None, "auto"):
+                raise ValueError(
+                    "paged_attn selects the paged runtime's attention read; "
+                    "the dense slot runtime has no page tables — drop "
+                    "paged_attn= or use runtime='paged'"
+                )
             if spec is not None:
                 raise ValueError(
                     "speculative decoding runs on the paged runtime only "

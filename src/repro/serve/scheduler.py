@@ -213,9 +213,15 @@ class PagedScheduler:
         stall_patience: int = 64,
         spec: Optional[SpecConfig] = None,
         prefix_cache: bool = False,
+        paged_attn: Optional[str] = None,
     ):
         if admission not in ("reserve", "optimistic"):
             raise ValueError(f"unknown admission policy {admission!r}")
+        if paged_attn is not None and paged_attn != cfg.paged_attn:
+            # the runtime knob overrides the model config's paged-attention
+            # backend; bake it in before any step/provider closure captures
+            # cfg (plain decode, spec draft/verify and warmup all trace it)
+            cfg = dataclasses.replace(cfg, paged_attn=paged_attn)
         if spec is not None and not greedy:
             raise ValueError(
                 "speculative decoding verifies drafts by greedy acceptance; "
