@@ -1,0 +1,199 @@
+"""Quantized KV cache at EQUAL pool bytes: how many more tokens stay
+resident, how much less the scheduler preempts, and what greedy decode pays.
+
+    PYTHONPATH=src python benchmarks/kv_quant.py           # full
+    PYTHONPATH=src python benchmarks/kv_quant.py --quick   # CI-sized
+
+Writes ``artifacts/BENCH_kv_quant.json`` (override with ``--out``).
+
+Setup: the serve_throughput mixed fleet (16 staggered requests, varied
+prompt/output lengths) against a deliberately tight fp16 page pool — total
+fleet demand ≈ 2× the fp16 pool's token capacity, so the fp16 baseline
+queues and preempts.  Each quantized dtype then gets a pool of the SAME
+byte budget (more pages per byte: ~2x for int8+scales at hd=32, ~3.6x for
+int4), and the fleet is replayed.  Reported per dtype:
+
+* ``pool_tokens`` / ``capacity_ratio`` — token capacity at equal bytes;
+* ``peak_resident_tokens`` / ``admitted_tokens_ratio`` — the largest number
+  of KV token-rows simultaneously live during the run (the measured
+  admission win; acceptance bar: int8 ≥ 1.8× fp16);
+* ``peak_resident_requests`` — concurrently decoding lanes at that peak;
+* ``preemptions`` — evictions the tight pool forced;
+* ``token_match_rate`` / ``exact_streams`` — greedy-token fidelity vs the
+  fp16 cache (mean matched-prefix fraction; int8 is near-lossless on this
+  model, int4 visibly lossier — the accuracy/capacity dial).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+try:  # run as `python benchmarks/kv_quant.py` (script dir on path)
+    from stamp import bench_stamp
+except ImportError:  # imported as a module from the repo root
+    from benchmarks.stamp import bench_stamp
+
+from repro.configs.registry import ARCHS
+from repro.core.da import DAConfig
+from repro.core.freeze import freeze_model
+from repro.models.model import init_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvcache import kv_page_bytes, pages_for
+
+KV_DTYPES = ("fp16", "int8", "int4")
+
+
+def build_cfg():
+    # the serve_throughput runtime-benchmark model: small enough that the
+    # scheduler, not BLAS, dominates, with hd=32 so int4 packs evenly
+    return dataclasses.replace(
+        ARCHS["qwen3-8b"],
+        name="qwen3-serve-bench",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab=4000,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+        moe_dropless=True,
+    )
+
+
+def workload(cfg, n_requests):
+    # fleet demand ~16 x 36 token rows ~= 3x the fp16 pool: the baseline is
+    # genuinely memory-bound while the quantized pools can hold the fleet
+    r = np.random.default_rng(2)
+    return [Request(uid=u,
+                    prompt=r.integers(0, cfg.vocab, int(r.integers(4, 12))),
+                    max_new_tokens=int(r.integers(24, 32)))
+            for u in range(n_requests)]
+
+
+def run_fleet(frozen, cfg, kv_dtype, n_pages, page_size, max_len,
+              n_requests):
+    """Serve the mixed fleet on one pool precision; track peak residency."""
+    eng = ServeEngine(cfg, frozen, batch_size=16, max_len=max_len,
+                      runtime="paged", page_size=page_size, n_pages=n_pages,
+                      admission="optimistic", prefill_lanes=8,
+                      prefill_chunk=4, kv_dtype=kv_dtype)
+    eng.warmup()
+    for req in workload(cfg, n_requests):
+        eng.submit(req)
+    sched = eng._rt
+    peak_tokens = peak_requests = 0
+    for _ in range(100_000):
+        active = eng.step()
+        live = [l for l in sched.lanes if l is not None]
+        peak_tokens = max(peak_tokens, sum(l.pos for l in live))
+        peak_requests = max(peak_requests, len(live))
+        if not active and not eng.queue:
+            break
+    m = eng.metrics()
+    return {
+        "kv_dtype": kv_dtype,
+        "n_pages": n_pages,
+        "pool_tokens": (n_pages - 1) * page_size,  # page 0 is garbage
+        "pool_bytes": m["pool"]["pool_bytes"],
+        "bytes_per_token": m["kv"]["bytes_per_token"],
+        "peak_resident_tokens": peak_tokens,
+        "peak_resident_requests": peak_requests,
+        "preemptions": m["preemptions"],
+        "out_tokens": m["out_tokens"],
+        "tokens_per_s": round(m["tokens_per_s"], 2),
+    }, {u: r.generated for u, r in eng.done.items()}
+
+
+def match_rate(base, other):
+    """Mean matched-prefix fraction of greedy streams vs the fp16 cache."""
+    fracs, exact = [], 0
+    for uid, ref in base.items():
+        got = other.get(uid, [])
+        n = 0
+        for a, b in zip(ref, got):
+            if a != b:
+                break
+            n += 1
+        fracs.append(n / max(1, len(ref)))
+        exact += int(list(got) == list(ref))
+    return round(float(np.mean(fracs)), 4), exact
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="fleet size (default 16)")
+    ap.add_argument("--out", default="artifacts/BENCH_kv_quant.json")
+    args = ap.parse_args()
+    n_requests = args.requests or 16
+
+    cfg = build_cfg()
+    params = init_model(jax.random.key(0), cfg)
+    art = freeze_model(params, DAConfig(x_signed=True), mode="auto",
+                       m_hint=8, model_cfg=cfg, pin_modes=False)
+    del params
+
+    # Equal-bytes pools: the fp16 budget is ONE dense-slot lane of max_len
+    # (the serve_throughput geometry halved — fleet demand of ~16×24 token
+    # rows is ~2× this pool's capacity, so the fp16 baseline is genuinely
+    # memory-bound); every other dtype gets the same byte budget.
+    page_size, max_len = 8, 192
+    n_pages_fp = 1 * pages_for(max_len, page_size) + 1
+    budget = n_pages_fp * kv_page_bytes(cfg, page_size, "fp16")
+
+    results, streams = {}, {}
+    for dt in KV_DTYPES:
+        n_pages = max(2, budget // kv_page_bytes(cfg, page_size, dt))
+        results[dt], streams[dt] = run_fleet(
+            art.params, cfg, dt, int(n_pages), page_size, max_len,
+            n_requests)
+        print(f"{dt:>5s}: pages={results[dt]['n_pages']:<4d} "
+              f"peak_tokens={results[dt]['peak_resident_tokens']:<5d} "
+              f"peak_reqs={results[dt]['peak_resident_requests']:<3d} "
+              f"preempt={results[dt]['preemptions']}")
+
+    fp = results["fp16"]
+    for dt in ("int8", "int4"):
+        r = results[dt]
+        r["capacity_ratio"] = round(r["pool_tokens"] / fp["pool_tokens"], 2)
+        r["admitted_tokens_ratio"] = round(
+            r["peak_resident_tokens"] / max(1, fp["peak_resident_tokens"]),
+            2)
+        r["token_match_rate"], r["exact_streams"] = match_rate(
+            streams["fp16"], streams[dt])
+        print(f"{dt}: capacity={r['capacity_ratio']}x "
+              f"admitted={r['admitted_tokens_ratio']}x "
+              f"match={r['token_match_rate']} "
+              f"exact={r['exact_streams']}/{n_requests}")
+
+    # acceptance: at equal pool bytes, int8 admits >= 1.8x the fp16 tokens
+    assert results["int8"]["admitted_tokens_ratio"] >= 1.8, results["int8"]
+
+    result = {
+        "bench": "kv_quant",
+        **bench_stamp(seed=0),
+        "model": cfg.name,
+        "quick": args.quick,
+        "requests": n_requests,
+        "page_size": page_size,
+        "max_len": max_len,
+        "equal_pool_bytes": int(budget),
+        "fleets": results,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -88,10 +88,10 @@ def workload(cfg, n_requests, sys_len, tail, max_new, base_uid=0):
 
 
 def run_once(cfg, frozen, prime, reqs, prefix_cache, batch, max_len,
-             page_size):
+             page_size, kv_dtype=None):
     eng = ServeEngine(cfg, frozen, batch_size=batch, max_len=max_len,
                       runtime="paged", page_size=page_size,
-                      prefix_cache=prefix_cache)
+                      prefix_cache=prefix_cache, kv_dtype=kv_dtype)
     eng.warmup()
     # warm the host loop too (uids far from the measured workload; a fresh
     # engine per configuration keeps the trie cold for the measured window)
@@ -143,6 +143,12 @@ def run_once(cfg, frozen, prime, reqs, prefix_cache, batch, max_len,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["fp16", "int8", "int4"],
+                    help="KV page precision for both configurations (prefix "
+                         "sharing works unchanged on quantized pages: scales "
+                         "ride inside the page, so trie hits, COW forks and "
+                         "evictions never consult the dtype)")
     ap.add_argument("--out", default="artifacts/BENCH_prefix_cache.json")
     args = ap.parse_args()
 
@@ -163,7 +169,8 @@ def main():
         key = "on" if pc else "off"
         prime, fleet = workload(cfg, n_requests, sys_len, tail, max_new)
         results[key], tokens[key] = run_once(
-            cfg, art.params, prime, fleet, pc, batch, max_len, page_size)
+            cfg, art.params, prime, fleet, pc, batch, max_len, page_size,
+            kv_dtype=args.kv_dtype)
         print(f"prefix_cache={key}: {results[key]}")
     assert tokens["on"] == tokens["off"], \
         "prefix caching changed decoded tokens — correctness bug"
@@ -174,6 +181,7 @@ def main():
         "model": cfg.name,
         "da_mode": "auto",
         "quick": args.quick,
+        "kv_dtype": args.kv_dtype or "fp16",
         "workload": {"requests": n_requests, "system_prompt_tokens": sys_len,
                      "tail_tokens": tail, "max_new": max_new, "batch": batch,
                      "page_size": page_size},

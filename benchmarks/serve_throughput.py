@@ -114,9 +114,9 @@ def _measure(eng, cfg, requests):
     return out
 
 
-def bench_decode(frozen, cfg, batch, max_new, max_len):
+def bench_decode(frozen, cfg, batch, max_new, max_len, kv_dtype=None):
     eng = ServeEngine(cfg, frozen, batch_size=batch, max_len=max_len,
-                      runtime="paged")
+                      runtime="paged", kv_dtype=kv_dtype)
     rng = np.random.default_rng(0)
     _warm(eng, cfg, rng)
     reqs = [Request(uid=u, prompt=rng.integers(0, cfg.vocab, 8),
@@ -124,7 +124,7 @@ def bench_decode(frozen, cfg, batch, max_new, max_len):
     return _measure(eng, cfg, reqs)
 
 
-def bench_mixed(frozen, cfg, repeats: int):
+def bench_mixed(frozen, cfg, repeats: int, kv_dtype=None):
     """16 staggered requests, varied prompt/output lengths, both runtimes at
     equal KV memory.
 
@@ -158,7 +158,7 @@ def bench_mixed(frozen, cfg, repeats: int):
     eng_p = ServeEngine(cfg, frozen, batch_size=16, max_len=max_len,
                         runtime="paged", page_size=page_size, n_pages=n_pages,
                         admission="optimistic", prefill_lanes=8,
-                        prefill_chunk=4)
+                        prefill_chunk=4, kv_dtype=kv_dtype)
     _warm(eng_p, cfg, rng)
 
     runs = {"slots": [], "paged": []}
@@ -186,6 +186,12 @@ def main():
     ap.add_argument("--quick", action="store_true", help="CI-sized run")
     ap.add_argument("--repeats", type=int, default=None,
                     help="interleaved measurement repeats (default 3; 2 quick)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["fp16", "int8", "int4"],
+                    help="KV page precision for the paged engines (the "
+                         "dedicated equal-bytes sweep is benchmarks/"
+                         "kv_quant.py; this re-times the runtime at one "
+                         "precision)")
     ap.add_argument("--out", default="artifacts/BENCH_serve_decode.json")
     args = ap.parse_args()
     repeats = args.repeats or (2 if args.quick else 3)
@@ -203,10 +209,11 @@ def main():
     decode = {}
     for batch in (1, 8, 32):
         decode[f"b{batch}"] = bench_decode(art.params, cfg, batch, max_new,
-                                           max_len=64)
+                                           max_len=64,
+                                           kv_dtype=args.kv_dtype)
         print(f"decode b={batch:<3d} {decode[f'b{batch}']}")
 
-    mixed = bench_mixed(art.params, cfg, repeats)
+    mixed = bench_mixed(art.params, cfg, repeats, kv_dtype=args.kv_dtype)
     print(f"mixed slots  {mixed['slots']}  runs={mixed['slots_runs']}")
     print(f"mixed paged  {mixed['paged']}  runs={mixed['paged_runs']}")
     print(f"speedup (equal KV memory, 16 staggered requests): "
@@ -218,6 +225,7 @@ def main():
         "model": cfg.name,
         "da_mode": "auto",
         "quick": args.quick,
+        "kv_dtype": args.kv_dtype or "fp16",
         "decode": decode,
         "mixed_16": mixed,
     }

@@ -49,7 +49,7 @@ def build_cfg():
 
 
 def print_plan(eng):
-    rep = da_memory_report(eng.params)
+    rep = da_memory_report(eng.params, model_cfg=eng.cfg)
     print(f"{rep['da_matrices']} weight matrices in DA form, "
           f"LUT blow-up {rep['cell_blowup']:.1f}x aggregate")
     for row in rep["layers"][:8]:
@@ -58,6 +58,12 @@ def print_plan(eng):
               f"luts={row['lut_bytes']/1e3:.0f}kB")
     if len(rep["layers"]) > 8:
         print(f"  ... {len(rep['layers']) - 8} more layers")
+    kv = rep.get("kv")
+    if kv:
+        dts = ",".join(sorted(set(kv["kv_dtypes"].values())))
+        print(f"  kv cache [{dts}]: {kv['bytes_per_token']} B/token "
+              f"({kv['capacity_multiplier']:.1f}x capacity vs compute-dtype "
+              f"pages)")
 
 
 def main():
@@ -88,6 +94,11 @@ def main():
                     help="paged-attention read: XLA gather or the fused "
                          "Pallas page-walk kernel (auto picks per shape "
                          "bucket; tokens identical either way)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["fp16", "int8", "int4"],
+                    help="KV page precision: int8/int4 store quantized codes "
+                         "with in-page dequant scales; fp16 keeps compute-"
+                         "dtype pages (default: model config / artifact)")
     ap.add_argument("--spec", default=None,
                     choices=["bitplane", "layerskip"],
                     help="self-speculative decoding: draft with a truncated-"
@@ -121,11 +132,12 @@ def main():
                                         max_len=96, runtime=args.runtime,
                                         page_size=args.page_size, spec=spec,
                                         prefix_cache=args.prefix_cache,
-                                        paged_attn=args.paged_attn)
+                                        paged_attn=args.paged_attn,
+                                        kv_dtype=args.kv_dtype)
         cfg = eng.cfg
         print(f"cold boot from {args.artifact} in "
               f"{time.perf_counter()-t0:.1f}s (zero float weights, "
-              f"runtime={eng.runtime})")
+              f"runtime={eng.runtime}, kv_dtype={cfg.kv_dtype})")
         print_plan(eng)
     else:
         cfg = build_cfg()
@@ -136,7 +148,8 @@ def main():
                           da_mode=args.mode,  # per-layer planned freeze
                           runtime=args.runtime, page_size=args.page_size,
                           spec=spec, prefix_cache=args.prefix_cache,
-                          paged_attn=args.paged_attn)
+                          paged_attn=args.paged_attn,
+                          kv_dtype=args.kv_dtype)
         if args.mode != "float":
             print(f"pre-VMM freeze ({args.mode}) in "
                   f"{time.perf_counter()-t0:.1f}s:")

@@ -90,6 +90,11 @@ class LayerPlan:
                  "pinned" (a concrete mode was requested, no planning).
     est_cost:    the winning backend's estimated cost — µs when measured,
                  model-ns when analytic, NaN when pinned.
+    kv_dtype:    KV-page precision this layer's cache serves at (recorded on
+                 the wk/wv mixer leaves only — ``"fp16"`` | ``"int8"`` |
+                 ``"int4"``; None for every non-KV leaf).  Artifacts carry it
+                 so ``ServeEngine.from_artifact`` builds a pool matching the
+                 plan instead of silently defaulting.
     """
 
     mode: str
@@ -100,6 +105,7 @@ class LayerPlan:
     source: str = "analytic"
     # informational, not identity: NaN (pinned plans) would poison ==
     est_cost: float = dataclasses.field(default=float("nan"), compare=False)
+    kv_dtype: Optional[str] = None
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -282,12 +288,21 @@ def freeze_model(
     cost_table: Optional[Dict[str, Dict[str, float]]] = None,
     group_size_candidates: Optional[Sequence[int]] = None,
     pin_modes: bool = True,
+    kv_dtype_overrides: Optional[Dict[str, str]] = None,
 ) -> DAArtifact:
     """Walk the param tree; pack every weight leaf under its per-layer plan.
 
     ``mode="auto"`` runs the planner (measured + analytic costs).  A concrete
     ``mode`` (any registered backend, legacy ``da_*`` spellings accepted)
     pins every layer to it — the one-size-fits-all escape hatch.
+
+    When ``model_cfg`` is given, the plan's wk/wv mixer entries additionally
+    record the KV-page precision their cache serves at:
+    ``model_cfg.kv_dtype`` globally, overridable per layer position via
+    ``kv_dtype_overrides`` (``{"pos_i": "fp16"|"int8"|"int4"}`` — the
+    per-layer escape hatch).  The artifact manifest then carries the KV
+    precision alongside every DA packing decision, so a serving process
+    booting ``from_artifact`` builds a matching pool or fails loudly.
 
     ``pin_modes=True`` bakes each layer's planned backend into its
     ``PackedWeights`` default, so serving needs no dispatch machinery (and a
@@ -300,6 +315,13 @@ def freeze_model(
     mode = canonical_mode(mode)
     planned = mode == "auto"
     plans: Dict[str, LayerPlan] = {}
+    base_kv = getattr(model_cfg, "kv_dtype", None) if model_cfg else None
+    for key, dt in (kv_dtype_overrides or {}).items():
+        from repro.models.kv_quant import KV_DTYPES
+
+        if dt not in KV_DTYPES:
+            raise ValueError(f"kv_dtype_overrides[{key!r}]={dt!r}; expected "
+                             f"one of {KV_DTYPES}")
 
     def walk(path, leaf):
         if not _is_da_leaf(path, leaf):
@@ -323,6 +345,12 @@ def freeze_model(
                 with_luts=get_backend(mode).needs_luts, k=k, n=n,
                 source="pinned",
             )
+        names = [path_entry_name(p) for p in path]
+        if base_kv is not None and names[-1] in ("wk", "wv"):
+            pos_seg = next((s for s in names if s.startswith("pos_")), None)
+            plan = dataclasses.replace(
+                plan,
+                kv_dtype=(kv_dtype_overrides or {}).get(pos_seg, base_kv))
         plans[_path_key(path)] = plan
         cfg = dataclasses.replace(da_cfg, group_size=plan.group_size)
         return pack_weights(
@@ -448,13 +476,20 @@ def _demote_stale_modes(params: Any, stale: set) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def da_memory_report(frozen_params: Any) -> dict:
+def da_memory_report(frozen_params: Any, model_cfg: Any = None,
+                     kv_dtypes: Any = None) -> dict:
     """The paper's Table-I trade-off at model scale — aggregate AND per layer.
 
     Besides the aggregate cell counts, ``"layers"`` lists every packed matrix
     with its plan decision (mode chosen, group size) and its storage split
     (int8 code bytes vs int32 LUT bytes), so the 2^L/L blow-up is
     inspectable layer by layer, not just in aggregate.
+
+    Pass ``model_cfg`` (all-attention archs) to additionally get a ``"kv"``
+    section pricing the OTHER resident tensor beside the DA weights — the
+    paged KV cache: per-position page dtype, bytes per token per layer
+    (codes + in-page scales), model-total bytes per token, and the capacity
+    multiplier vs compute-dtype pages at equal pool bytes.
     """
     weights = luts = mats = 0
     layers = []
@@ -481,10 +516,29 @@ def da_memory_report(frozen_params: Any) -> dict:
                                         if leaf.luts is not None else 0),
             "cell_blowup": (lut_sz / leaf.wq.size) if leaf.wq.size else 0.0,
         })
-    return {
+    report = {
         "da_matrices": mats,
         "weight_cells": weights,
         "lut_cells": luts,
         "cell_blowup": (luts / weights) if weights else 0.0,
         "layers": layers,
     }
+    if model_cfg is not None and all(
+            model_cfg.mixer_kind(p) == "attn"
+            for p in range(model_cfg.period)):
+        from repro.serve.kvcache import kv_token_bytes, resolve_kv_dtypes
+
+        resolved = resolve_kv_dtypes(model_cfg, kv_dtypes)
+        per_pos = {key: kv_token_bytes(model_cfg, dt)
+                   for key, dt in resolved.items()}
+        total = model_cfg.n_periods * sum(per_pos.values())
+        fp_total = model_cfg.n_periods * sum(
+            kv_token_bytes(model_cfg, "fp16") for _ in per_pos)
+        report["kv"] = {
+            "kv_dtypes": resolved,
+            "token_bytes_per_layer": per_pos,
+            "bytes_per_token": total,
+            "fp_bytes_per_token": fp_total,
+            "capacity_multiplier": fp_total / total if total else 0.0,
+        }
+    return report

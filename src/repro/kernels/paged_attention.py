@@ -52,6 +52,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.models import kv_quant as _kvq
+
 # Matches models/attention.NEG_INF so masked lanes are bit-identical.
 NEG_INF = -1e30
 
@@ -65,34 +67,49 @@ def _paged_attn_kernel(
     table_ref,  # scalar-prefetch: [B, W] page table (SMEM)
     q_ref,      # [1, T, H, hd] query block for this batch row
     tpos_ref,   # [1, T] temporal positions for this batch row
-    k_ref,      # [1, ps, kv, hd] — ONE physical K page, chosen by the table
-    v_ref,      # [1, ps, kv, hd] — ONE physical V page
-    o_ref,      # [1, T, H, hd] output block
-    s_scr,      # VMEM [kv, G, T, S] masked scores, staged across the walk
-    v_scr,      # VMEM [S, kv, hd] gathered V rows
-    m_scr,      # VMEM [kv, G, T] running row max
-    *,
+    k_ref,      # [1, ps, kv, hd(/2)] — ONE physical K page, chosen by table
+    v_ref,      # [1, ps, kv, hd(/2)] — ONE physical V page
+    *rest,      # [ks_ref, vs_ref,] o_ref, s_scr, v_scr, m_scr — the scale
+    #             pages [1, ps, kv, 1] ride the same table-indexed walk and
+    #             are present iff the pool is quantized (kv_fmt != "fp")
     n_pages_walked: int,
     page_size: int,
     n_kv: int,
     n_groups: int,
     softmax_dtype,
     mask_mode: str,
+    kv_fmt: str,
 ):
     del table_ref  # consumed by the BlockSpec index maps
+    if kv_fmt == "fp":
+        o_ref, s_scr, v_scr, m_scr = rest
+    else:
+        ks_ref, vs_ref, o_ref, s_scr, v_scr, m_scr = rest
     wi = pl.program_id(1)
     ps = page_size
     t = q_ref.shape[1]
     hd = q_ref.shape[3]
     sd = softmax_dtype
 
+    # Dequantize the DMA'd page in-register: the same elementwise formula
+    # the gather read applies to its gathered view (kv_quant.dequantize_kv),
+    # so each element is bitwise the gather path's — the per-page score
+    # block below stays a slice of the gather einsum, quantized or not.
+    if kv_fmt == "fp":
+        k_page = k_ref[...]
+        v_page = v_ref[0]
+    else:
+        k_page = _kvq.dequantize_kv(k_ref[...], ks_ref[...], kv_fmt,
+                                    q_ref.dtype)
+        v_page = _kvq.dequantize_kv(v_ref[0], vs_ref[0], kv_fmt, q_ref.dtype)
+
     # Stage this page's V rows at their logical offset in the sequence.
-    v_scr[pl.ds(wi * ps, ps)] = v_ref[0]
+    v_scr[pl.ds(wi * ps, ps)] = v_page
 
     # Grouped-GQA scores for this page: slice of the gather path's einsum
     # over the same contraction (hd), so it is bitwise the same block.
     qg = q_ref[0].reshape(t, n_kv, n_groups, hd)[None]
-    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k_ref[...]) / (hd ** 0.5)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k_page) / (hd ** 0.5)
     scores = scores.astype(sd)
 
     # Ragged/garbage masking: key position valid iff kpos <= tpos.
@@ -130,13 +147,15 @@ def _paged_attn_kernel(
 
 def paged_attention(
     q: jax.Array,           # [B, T, H, hd]
-    k_pool: jax.Array,      # [n_pages, ps, kv, hd]
+    k_pool: jax.Array,      # [n_pages, ps, kv, hd]  (hd//2 for packed int4)
     v_pool: jax.Array,      # [n_pages, ps, kv, hd]
     page_table: jax.Array,  # [B, W] int32 physical page ids
     tpos: jax.Array,        # [B, T] int32 temporal positions (pad -> pad_pos)
     *,
     softmax_dtype="float32",
     mask_mode: str = "where",
+    k_scale: jax.Array | None = None,  # [n_pages, ps, kv, 1] in-page scales
+    v_scale: jax.Array | None = None,  # (quantized pools only)
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused paged-attention read: returns ``[B, T, H, hd]`` context.
@@ -146,9 +165,17 @@ def paged_attention(
     page walk, ragged masking, online-softmax accumulation and PV
     contraction all run inside one Pallas kernel; see the module docstring
     for the bit-parity argument.
+
+    Quantized pools (int8 codes, or int4 nibble pairs packed along hd) pass
+    their in-page scales: the scale blocks ride the SAME scalar-prefetch
+    index map as the page walk — each grid step DMAs one codes page plus
+    its ``[ps, kv, 1]`` scale sliver — and dequantization happens
+    in-register before the score einsum, with the gather backend's exact
+    elementwise formula, so the two backends stay bit-identical on
+    quantized pages too.
     """
     b, t, h, hd = q.shape
-    _, ps, kv, _ = k_pool.shape
+    _, ps, kv, hd_p = k_pool.shape
     w = page_table.shape[1]
     s = w * ps
     if h % kv:
@@ -157,6 +184,7 @@ def paged_attention(
     if interpret is None:
         interpret = _default_interpret()
     sd = jnp.dtype(softmax_dtype)
+    kv_fmt = _kvq.kv_format(k_pool, k_scale, hd)
 
     kernel = functools.partial(
         _paged_attn_kernel,
@@ -166,21 +194,33 @@ def paged_attention(
         n_groups=g,
         softmax_dtype=sd,
         mask_mode=mask_mode,
+        kv_fmt=kv_fmt,
     )
+    page_spec = pl.BlockSpec((1, ps, kv, hd_p),
+                             lambda bi, wi, tbl: (tbl[bi, wi], 0, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, t, h, hd), lambda bi, wi, tbl: (bi, 0, 0, 0)),
+        pl.BlockSpec((1, t), lambda bi, wi, tbl: (bi, 0)),
+        # The page walk: block index = table entry for (row, slot).
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, tpos.astype(jnp.int32), k_pool, v_pool]
+    if kv_fmt != "fp":
+        scale_spec = pl.BlockSpec((1, ps, kv, 1),
+                                  lambda bi, wi, tbl: (tbl[bi, wi], 0, 0, 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, w),
-        in_specs=[
-            pl.BlockSpec((1, t, h, hd), lambda bi, wi, tbl: (bi, 0, 0, 0)),
-            pl.BlockSpec((1, t), lambda bi, wi, tbl: (bi, 0)),
-            # The page walk: block index = table entry for (row, slot).
-            pl.BlockSpec((1, ps, kv, hd), lambda bi, wi, tbl: (tbl[bi, wi], 0, 0, 0)),
-            pl.BlockSpec((1, ps, kv, hd), lambda bi, wi, tbl: (tbl[bi, wi], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, t, h, hd), lambda bi, wi, tbl: (bi, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((kv, g, t, s), sd),
-            pltpu.VMEM((s, kv, hd), v_pool.dtype),
+            # staged V rows are dequantized, so the scratch holds q dtype
+            pltpu.VMEM((s, kv, hd),
+                       v_pool.dtype if kv_fmt == "fp" else q.dtype),
             pltpu.VMEM((kv, g, t), sd),
         ],
     )
@@ -189,4 +229,4 @@ def paged_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, t, h, hd), q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), q, tpos.astype(jnp.int32), k_pool, v_pool)
+    )(page_table.astype(jnp.int32), *operands)

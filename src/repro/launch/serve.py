@@ -51,6 +51,13 @@ def main():
                     help="paged-attention read: XLA gather or the fused "
                          "Pallas page-walk kernel (auto picks per shape "
                          "bucket; tokens identical either way)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["fp16", "int8", "int4"],
+                    help="KV page precision (paged runtime): int8/int4 pages "
+                         "store quantized codes with in-page dequant scales "
+                         "(~2x/~3.6x more resident tokens per pool byte); "
+                         "fp16 keeps compute-dtype pages. Default: the model "
+                         "config / artifact plan")
     ap.add_argument("--spec", default=None,
                     choices=["bitplane", "layerskip", "artifact"],
                     help="speculative decoding draft provider (paged runtime; "
@@ -100,10 +107,12 @@ def main():
                                         runtime=args.runtime,
                                         page_size=args.page_size, spec=spec,
                                         prefix_cache=args.prefix_cache,
-                                        paged_attn=args.paged_attn)
+                                        paged_attn=args.paged_attn,
+                                        kv_dtype=args.kv_dtype)
         cfg = eng.cfg
         print(f"arch={cfg.name} cold boot from {args.artifact} "
-              f"(zero float weights, runtime={eng.runtime})")
+              f"(zero float weights, runtime={eng.runtime}, "
+              f"kv_dtype={cfg.kv_dtype})")
     else:
         if args.arch is None:
             raise SystemExit("--arch is required unless booting --artifact")
@@ -124,12 +133,17 @@ def main():
                           max_len=args.max_len, da_mode=mode,
                           runtime=args.runtime, page_size=args.page_size,
                           spec=spec, prefix_cache=args.prefix_cache,
-                          paged_attn=args.paged_attn)
+                          paged_attn=args.paged_attn, kv_dtype=args.kv_dtype)
         if mode is not None:
-            rep = da_memory_report(eng.params)
+            rep = da_memory_report(eng.params, model_cfg=eng.cfg)
             print(f"pre-VMM freeze: {rep['da_matrices']} matrices"
                   + (f", LUT blow-up {rep['cell_blowup']:.0f}x"
                      if rep["lut_cells"] else ""))
+            kv = rep.get("kv")
+            if kv:
+                print(f"kv cache: {kv['bytes_per_token']} B/token "
+                      f"({kv['capacity_multiplier']:.1f}x capacity vs "
+                      f"compute-dtype pages)")
         if args.save_artifact:
             print(f"artifact -> {eng.save_artifact(args.save_artifact)}")
 
@@ -158,6 +172,12 @@ def main():
               f"draft_steps={sm['draft_steps']} "
               f"verify_steps={sm['verify_steps']} "
               f"disabled={sm['disabled_requests']}")
+    km = eng.metrics().get("kv")
+    if km and km["capacity_multiplier"] != 1.0:
+        print(f"kv[{','.join(sorted(set(km['kv_dtypes'].values())))}] "
+              f"{km['bytes_per_token']} B/token "
+              f"capacity={km['capacity_multiplier']:.1f}x "
+              f"pool={km['pool_bytes']/1e6:.1f}MB")
     pm = eng.metrics().get("prefix_cache")
     if pm:
         print(f"prefix-cache hit_rate={pm['hit_rate']:.2f} "

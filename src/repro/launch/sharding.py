@@ -167,7 +167,12 @@ def da_leaf_axes(name: str, ndim: int) -> Optional[Tuple[Optional[str], ...]]:
 
 def paged_cache_axes(ndim: int) -> Tuple[Optional[str], ...]:
     """Logical axes for a PagedKVCache pool leaf: [..., pages, page_slot,
-    kv_heads, head_dim] with leading period-stack dims replicated."""
+    kv_heads, head_dim] with leading period-stack dims replicated.
+
+    Quantized-KV scale pools ([..., pages, page_slot, kv_heads, 1]) reuse
+    these axes: the kv-heads slice follows its code pool to the same device,
+    and the size-1 head_dim axis replicates via the divisibility fallback —
+    no separate rule needed."""
     if ndim < 4:
         raise ValueError(f"paged pool leaves are >=4-D, got ndim={ndim}")
     return (None,) * (ndim - 4) + ("page", "page_slot", "kv_heads", "head_dim")

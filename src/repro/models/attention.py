@@ -12,6 +12,7 @@ from repro.core.engine import da_qkv_matmul
 from repro.core.linear import dense
 from repro.launch.sharding import constrain
 from repro.models.config import ModelConfig
+from repro.models import kv_quant as _kvq
 from repro.models.layers import apply_rope, rms_norm_headwise, rope_angles
 
 NEG_INF = -1e30
@@ -41,16 +42,47 @@ class PagedKVCache(NamedTuple):
     live on the physical pages its page table names. The host-side pool
     allocator / page tables / defrag live in ``repro.serve.kvcache``; this
     container sits beside :class:`KVCache` because attention indexes it.
+
+    Quantized pools (``kv_dtype`` int8/int4) store int8 codes in k/v (int4
+    packs two nibbles per byte along hd) and carry per-(slot, head) dequant
+    scales ``[n_pages, page_size, n_kv, 1]`` float16 in k_scale/v_scale —
+    rank-4 pool leaves like k/v, so every page-granular pool operation
+    (remap, COW copy, defrag, sharding) moves scales together with values
+    with zero special-casing.  Unquantized pools leave the scales ``None``
+    (an empty pytree subtree: today's layout, byte-for-byte).  Pages are
+    self-describing — readers infer the format from the arrays via
+    :func:`repro.models.kv_quant.kv_format`, never from config plumbing.
     """
 
     k: jax.Array
     v: jax.Array
+    k_scale: Optional[jax.Array] = None
+    v_scale: Optional[jax.Array] = None
 
     @staticmethod
-    def zeros(cfg: ModelConfig, n_pages: int, page_size: int, dtype):
-        shape = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim_)
-        return PagedKVCache(k=jnp.zeros(shape, dtype=dtype),
-                            v=jnp.zeros(shape, dtype=dtype))
+    def zeros(cfg: ModelConfig, n_pages: int, page_size: int, dtype,
+              kv_dtype: str = "fp16"):
+        hd = cfg.head_dim_
+        if kv_dtype not in _kvq.KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}; expected one "
+                             f"of {_kvq.KV_DTYPES}")
+        if kv_dtype == "fp16":  # escape hatch: compute-dtype pages, no scales
+            shape = (n_pages, page_size, cfg.n_kv_heads, hd)
+            return PagedKVCache(k=jnp.zeros(shape, dtype=dtype),
+                                v=jnp.zeros(shape, dtype=dtype))
+        if kv_dtype == "int4" and hd % 2:
+            raise ValueError(
+                f"kv_dtype='int4' packs two nibbles per byte along head_dim; "
+                f"head_dim={hd} is odd and cannot pack")
+        hd_p = hd // 2 if kv_dtype == "int4" else hd
+        shape = (n_pages, page_size, cfg.n_kv_heads, hd_p)
+        sshape = (n_pages, page_size, cfg.n_kv_heads, 1)
+        return PagedKVCache(
+            k=jnp.zeros(shape, dtype=jnp.int8),
+            v=jnp.zeros(shape, dtype=jnp.int8),
+            k_scale=jnp.zeros(sshape, dtype=_kvq.KV_SCALE_DTYPE),
+            v_scale=jnp.zeros(sshape, dtype=_kvq.KV_SCALE_DTYPE),
+        )
 
     @property
     def page_size(self) -> int:
@@ -264,7 +296,8 @@ def _chunked_attention(q, k, v, q_offset: int, chunk: int, unroll: bool = False)
 
 
 def paged_gather_read(q, k_pool, v_pool, page_table, tpos, *,
-                      softmax_dtype="float32", mask_mode: str = "where"):
+                      softmax_dtype="float32", mask_mode: str = "where",
+                      k_scale=None, v_scale=None):
     """Gather-based paged-attention read (the ``"gather"`` engine backend).
 
     Gathers each row's page table back into a contiguous ``[B, S, kv, hd]``
@@ -272,10 +305,22 @@ def paged_gather_read(q, k_pool, v_pool, page_table, tpos, *,
     it — the XLA-native execution the fused Pallas kernel is measured
     against. ``kpos <= tpos`` masks unwritten cache, pad lanes and the
     garbage column in one comparison.
+
+    Quantized pools pass the in-page scales (``[P, ps, kv, 1]``); the codes
+    and their scales ride the SAME gather and dequantize elementwise
+    (``kv_quant.dequantize_kv``) before the unchanged attention math — an
+    elementwise map commutes with the gather, so each gathered element is
+    bitwise the value the fused kernel dequantizes in-register.
     """
     b = q.shape[0]
-    kg = k_pool[page_table].reshape(b, -1, k_pool.shape[-2], k_pool.shape[-1])
-    vg = v_pool[page_table].reshape(b, -1, v_pool.shape[-2], v_pool.shape[-1])
+    fmt = _kvq.kv_format(k_pool, k_scale, q.shape[-1])
+    kg = k_pool[page_table]            # [B, W, ps, kv, hd(/2 for int4)]
+    vg = v_pool[page_table]
+    if fmt != "fp":
+        kg = _kvq.dequantize_kv(kg, k_scale[page_table], fmt, q.dtype)
+        vg = _kvq.dequantize_kv(vg, v_scale[page_table], fmt, q.dtype)
+    kg = kg.reshape(b, -1, kg.shape[-2], kg.shape[-1])
+    vg = vg.reshape(b, -1, vg.shape[-2], vg.shape[-1])
     kg = constrain(kg, ("batch", "kv_seq", "kv_heads", "head_dim"))
     vg = constrain(vg, ("batch", "kv_seq", "kv_heads", "head_dim"))
     kpos = jnp.arange(kg.shape[1])
@@ -305,20 +350,37 @@ def _paged_attention(q, k, v, cache: PagedKVCache, page_table, tpos,
 
     b, t = tpos.shape
     ps = cache.page_size
+    fmt = _kvq.kv_format(cache.k, cache.k_scale, q.shape[-1])
     b_idx = jnp.arange(b)[:, None]
     page_ids = page_table[b_idx, tpos // ps]          # [B, T] physical pages
     off = tpos % ps
-    ck = cache.k.at[page_ids, off].set(k.astype(cache.k.dtype))
-    cv = cache.v.at[page_ids, off].set(v.astype(cache.v.dtype))
-    ck = constrain(ck, ("page", "page_slot", "kv_heads", "head_dim"))
-    cv = constrain(cv, ("page", "page_slot", "kv_heads", "head_dim"))
-    new_cache = PagedKVCache(k=ck, v=cv)
+    pool_axes = ("page", "page_slot", "kv_heads", "head_dim")
+    if fmt == "fp":
+        ck = cache.k.at[page_ids, off].set(k.astype(cache.k.dtype))
+        cv = cache.v.at[page_ids, off].set(v.astype(cache.v.dtype))
+        cks = cvs = None
+    else:
+        # quantize at scatter time: each row gets its own per-head absmax
+        # scale (write-once — see repro.models.kv_quant), and the scales
+        # scatter to the same (page, slot) the codes do
+        qk, sk = _kvq.quantize_kv(k, fmt)
+        qv, sv = _kvq.quantize_kv(v, fmt)
+        ck = cache.k.at[page_ids, off].set(qk)
+        cv = cache.v.at[page_ids, off].set(qv)
+        cks = cache.k_scale.at[page_ids, off].set(sk)
+        cvs = cache.v_scale.at[page_ids, off].set(sv)
+        cks = constrain(cks, pool_axes)
+        cvs = constrain(cvs, pool_axes)
+    ck = constrain(ck, pool_axes)
+    cv = constrain(cv, pool_axes)
+    new_cache = PagedKVCache(k=ck, v=cv, k_scale=cks, v_scale=cvs)
     name = select_attn_backend(getattr(cfg, "paged_attn", "auto"),
                                batch=b, t=t,
                                kv_len=page_table.shape[1] * ps)
     y = get_attn_backend(name).fn(
         q, ck, cv, page_table, tpos,
         softmax_dtype=cfg.softmax_dtype, mask_mode=cfg.attn_mask_mode,
+        k_scale=cks, v_scale=cvs,
     )
     return y, new_cache
 

@@ -79,6 +79,10 @@ class ModelConfig:
                                       # / platform dispatch) | gather (XLA
                                       # page-table gather) | fused (Pallas
                                       # in-kernel page walk)
+    kv_dtype: str = "fp16"            # paged KV page storage: fp16 (compute-
+                                      # dtype pages, today's layout) | int8 |
+                                      # int4 (packed nibbles) with in-page
+                                      # per-(slot, head) dequant scales
 
     # ---- derived ------------------------------------------------------------
     @property

@@ -1,0 +1,132 @@
+"""KV-page quantization numerics shared by every paged-attention reader.
+
+The paper stores *restructured precision* (weight-sums instead of weights) to
+make inference multiplier-free; this module applies the same discipline to
+the serving runtime's dominant memory consumer, the KV page pool. Pages hold
+int8 codes (or two int4 nibbles packed per byte) and the dequantization
+scales ride INSIDE the page allocation — shape ``[n_pages, ps, kv, 1]``
+float16 beside the ``[n_pages, ps, kv, hd]`` codes — so a physical page
+stays self-describing and every pool operation (COW ``copy_page``, defrag
+remap, spec checkpoint/rollback, prefix-trie sharing) moves values and
+scales together without ever dequantizing.
+
+Scale granularity is one scale per (page slot, kv head) — finer than the
+naive one-scale-per-page — because the runtime's exactness invariants demand
+**write-once** rows:
+
+* A per-page running absmax would either misinterpret earlier rows when a
+  later row grows the scale, or force whole-page requantization on every
+  write (accumulating rounding error and requiring in-step knowledge of
+  which rows are live).
+* Speculative decoding rolls rejected draft rows back by page-table
+  bookkeeping alone; a draft row that had widened a shared page scale would
+  leave a permanent numeric trace, breaking the spec==plain token-identity
+  guarantee.  With per-row scales, a row is quantized exactly once, with its
+  own absmax, and stale rows are masked out exactly like stale fp KV.
+
+The storage overhead is ``2/hd`` bytes per element (~3% at hd=64) — the
+``value_bytes_per_elem: 1, scale_bytes: 2`` memory model the ROADMAP prices.
+
+Dequantization is one elementwise formula — ``codes.astype(compute) *
+scale.astype(compute)`` — shared verbatim by the XLA gather read and the
+fused Pallas page-walk kernel (these jnp ops trace inside Pallas), so the
+two attention backends stay bit-identical on quantized pages just as they
+are on fp pages.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Recognized KV page dtypes. "fp16" is the escape hatch label: pages stay at
+#: the model's compute dtype (fp16/bf16/f32), scales absent — byte-for-byte
+#: today's layout.
+KV_DTYPES = ("fp16", "int8", "int4")
+
+#: Symmetric quantization ranges. int4 uses [-7, 7] (not -8) so the code
+#: space is symmetric and the packed nibble always sign-extends cleanly.
+KV_QMAX = {"int8": 127.0, "int4": 7.0}
+
+#: Dtype the in-page scales are stored at (2 bytes per (slot, head)).
+KV_SCALE_DTYPE = jnp.float16
+
+
+def kv_format(k_pool: jax.Array, k_scale, head_dim: int) -> str:
+    """Infer a pool's KV dtype from its arrays alone — pages self-describe.
+
+    ``"fp"`` (unquantized, no scales), ``"int8"`` (codes at full head_dim) or
+    ``"int4"`` (two nibbles per byte: codes at head_dim // 2).
+    """
+    if k_scale is None:
+        return "fp"
+    hd_p = k_pool.shape[-1]
+    if hd_p == head_dim:
+        return "int8"
+    if 2 * hd_p == head_dim:
+        return "int4"
+    raise ValueError(
+        f"quantized KV pool with head axis {hd_p} matches neither int8 "
+        f"(head_dim={head_dim}) nor packed int4 (head_dim//2={head_dim // 2})"
+    )
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int8-held nibbles [-7, 7] pairwise along the last axis.
+
+    ``[..., hd]`` → ``[..., hd // 2]``; element ``2i`` lands in the low
+    nibble, ``2i+1`` in the high nibble of one int8 byte.
+    """
+    lo = jnp.bitwise_and(codes[..., 0::2].astype(jnp.int32), 0xF)
+    hi = jnp.left_shift(jnp.bitwise_and(codes[..., 1::2].astype(jnp.int32),
+                                        0xF), 4)
+    return jnp.bitwise_or(lo, hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`: ``[..., hd // 2]`` int8 → ``[..., hd]``.
+
+    Sign-extending shifts recover the exact stored integers, so any reader
+    using this helper sees identical code values (ints are exact — the
+    bit-parity between attention backends rests on this).
+    """
+    x = packed.astype(jnp.int32)
+    lo = jnp.right_shift(jnp.left_shift(x, 28), 28)
+    hi = jnp.right_shift(jnp.left_shift(x, 24), 28)
+    both = jnp.stack([lo, hi], axis=-1)  # [..., hd//2, 2]
+    return both.reshape(*packed.shape[:-1], 2 * packed.shape[-1]).astype(
+        jnp.int8)
+
+
+def quantize_kv(x: jax.Array, kv_dtype: str):
+    """Quantize fresh KV rows ``[..., kv, hd]`` → ``(codes, scale)``.
+
+    One symmetric absmax scale per ``[..., kv]`` row, **rounded to the
+    storage dtype first** and the codes quantized against the rounded value
+    — so ``codes * stored_scale`` at read time reproduces exactly what was
+    intended at write time (write-once: a row is never reinterpreted under a
+    different scale).  All-zero rows get scale 0 and codes 0.
+    """
+    qmax = KV_QMAX[kv_dtype]
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = (amax / qmax).astype(KV_SCALE_DTYPE)          # [..., kv, 1]
+    s32 = scale.astype(jnp.float32)
+    inv = jnp.where(s32 > 0, 1.0 / jnp.where(s32 > 0, s32, 1.0), 0.0)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) * inv), -qmax, qmax)
+    codes = codes.astype(jnp.int8)
+    if kv_dtype == "int4":
+        codes = pack_int4(codes)
+    return codes, scale
+
+
+def dequantize_kv(codes: jax.Array, scale: jax.Array, kv_dtype: str,
+                  out_dtype) -> jax.Array:
+    """``codes [..., kv, hd(/2)]`` + ``scale [..., kv, 1]`` → fp rows.
+
+    THE dequantization formula — both attention backends call exactly this
+    (the gather read on the gathered view, the Pallas kernel on each DMA'd
+    page in-register), so their dequantized elements are bitwise equal and
+    the PR-6 backend bit-parity argument carries over to quantized pages.
+    """
+    if kv_dtype == "int4":
+        codes = unpack_int4(codes)
+    return codes.astype(out_dtype) * scale.astype(out_dtype)

@@ -281,12 +281,19 @@ class ServeEngine:
         spec=None,
         prefix_cache: bool = False,
         paged_attn: Optional[str] = None,
+        kv_dtype: Optional[str] = None,
+        kv_dtypes: Optional[Dict[str, str]] = None,
     ):
         # paged_attn: the paged-attention read backend — "gather" (XLA
         # page-table gather), "fused" (Pallas in-kernel page walk; interpret
         # mode off-TPU) or "auto" (cost-table / platform dispatch per shape
         # bucket).  None inherits cfg.paged_attn.  Decoded tokens are
         # bit-identical across backends at the default float32 softmax.
+        # kv_dtype: KV page precision — "fp16" (compute-dtype pages, today's
+        # layout), "int8" or "int4" (quantized codes with in-page dequant
+        # scales).  None inherits cfg.kv_dtype.  kv_dtypes overrides per
+        # layer position ({"pos_i": dtype}, missing positions follow
+        # kv_dtype) — the freeze planner's per-layer escape hatch.
         # spec: speculative decoding over the paged runtime — a
         # repro.spec.SpecConfig, or a provider-name shorthand
         # ("bitplane" | "layerskip" | "artifact" → defaults).  Drafts gamma
@@ -305,6 +312,11 @@ class ServeEngine:
         # da_pin_modes=False keeps runtime shape dispatch on the frozen
         # artifact (prefill and decode may pick different backends) instead
         # of baking in the decode-bucket plan.
+        # Bake the KV precision into cfg BEFORE freezing, so the artifact's
+        # model config and plan record the precision this engine serves at
+        # (from_artifact then rebuilds a matching pool without being told).
+        if kv_dtype is not None and kv_dtype != cfg.kv_dtype:
+            cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
         self.artifact = None
         if (da_mode is not None and da_mode != "float"
                 and not _is_frozen(params)):
@@ -314,6 +326,7 @@ class ServeEngine:
             self.artifact = freeze_model(
                 params, DAConfig(x_signed=True), mode=da_mode,
                 m_hint=batch_size, model_cfg=cfg, pin_modes=da_pin_modes,
+                kv_dtype_overrides=kv_dtypes,
             )
             params = self.artifact.params
         # the engine always uses the sliced prefill head (strictly better)
@@ -338,8 +351,17 @@ class ServeEngine:
                 prefill_chunk=prefill_chunk, prefill_lanes=prefill_lanes,
                 token_budget=token_budget, admission=admission, spec=spec,
                 prefix_cache=prefix_cache, paged_attn=paged_attn,
+                kv_dtypes=kv_dtypes,
             )
         elif runtime == "slots":
+            quantized = cfg.kv_dtype != "fp16" or any(
+                dt != "fp16" for dt in (kv_dtypes or {}).values())
+            if quantized:
+                raise ValueError(
+                    "quantized KV (kv_dtype/kv_dtypes) lives in the paged "
+                    "runtime's page pool; the dense slot runtime has no "
+                    "pages — drop kv_dtype= or use runtime='paged'"
+                )
             if paged_attn not in (None, "auto"):
                 raise ValueError(
                     "paged_attn selects the paged runtime's attention read; "
@@ -375,7 +397,16 @@ class ServeEngine:
     ) -> "ServeEngine":
         """Boot the full serving runtime from a persisted DA artifact: the
         packed weights come straight off disk — no float params, no
-        re-packing (the paper's freeze-once premise, operationally)."""
+        re-packing (the paper's freeze-once premise, operationally).
+
+        KV precision follows the artifact: the plan's wk entries record the
+        per-position page dtype the model was frozen for, and the pool is
+        built to match — an artifact frozen at int8 cannot silently boot an
+        fp16 pool.  An explicit ``kv_dtype=`` in ``runtime_kw`` overrides a
+        HOMOGENEOUS plan (re-serving an old fp16 artifact quantized, or
+        vice versa — decode is cache-precision-, not weight-, dependent);
+        overriding a plan with per-layer escape hatches would silently
+        flatten them, so that raises instead."""
         from repro.core.freeze import load_artifact
 
         art = load_artifact(directory)
@@ -384,6 +415,23 @@ class ServeEngine:
                 f"artifact {directory} carries no model config; freeze with "
                 "freeze_model(..., model_cfg=cfg) to make it servable"
             )
+        plan_kv: Dict[str, str] = {}
+        for key, p in art.plan.items():
+            if p.kv_dtype is not None and key.endswith("/wk"):
+                seg = next((s for s in key.split("/")
+                            if s.startswith("pos_")), None)
+                if seg is not None:
+                    plan_kv[seg] = p.kv_dtype
+        explicit = (runtime_kw.get("kv_dtype") is not None
+                    or bool(runtime_kw.get("kv_dtypes")))
+        if explicit and len(set(plan_kv.values())) > 1:
+            raise ValueError(
+                f"artifact {directory} was frozen with per-layer KV dtypes "
+                f"{plan_kv}; overriding them with a global kv_dtype= would "
+                "silently flatten the plan — drop the override or re-freeze"
+            )
+        if not explicit and plan_kv:
+            runtime_kw = dict(runtime_kw, kv_dtypes=plan_kv)
         eng = cls(art.model_cfg, art.params, batch_size, max_len,
                   greedy=greedy, **runtime_kw)
         eng.artifact = art

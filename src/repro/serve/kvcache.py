@@ -34,19 +34,64 @@ import numpy as np
 
 from repro.models.attention import PagedKVCache  # noqa: F401  (re-export)
 from repro.models.config import ModelConfig
+from repro.models.kv_quant import KV_DTYPES, KV_SCALE_DTYPE
 
 #: Physical page reserved for pad-token writes and unallocated table slots.
 GARBAGE_PAGE = 0
 
 
+def resolve_kv_dtypes(cfg: ModelConfig,
+                      kv_dtypes=None) -> Dict[str, str]:
+    """Per-period-position KV page dtypes, validated loudly.
+
+    ``kv_dtypes`` may be ``None`` (every position follows ``cfg.kv_dtype``),
+    one dtype string, or a ``{"pos_i": dtype}`` dict whose missing positions
+    fall back to ``cfg.kv_dtype`` — the shape the freeze planner's per-layer
+    escape hatch produces (``LayerPlan.kv_dtype``).  Validation happens here,
+    once, at pool-build time: an unknown dtype or an int4 request against an
+    odd head_dim raises with the offending position named, instead of
+    failing deep inside a kernel trace.
+    """
+    base = getattr(cfg, "kv_dtype", "fp16")
+    if isinstance(kv_dtypes, str):
+        out = {f"pos_{p}": kv_dtypes for p in range(cfg.period)}
+    else:
+        kv_dtypes = kv_dtypes or {}
+        unknown = set(kv_dtypes) - {f"pos_{p}" for p in range(cfg.period)}
+        if unknown:
+            raise ValueError(
+                f"kv_dtypes names positions {sorted(unknown)} outside this "
+                f"model's period ({cfg.period} layer position(s))")
+        out = {f"pos_{p}": kv_dtypes.get(f"pos_{p}", base)
+               for p in range(cfg.period)}
+    for key, dt in out.items():
+        if dt not in KV_DTYPES:
+            raise ValueError(f"{key}: unknown kv_dtype {dt!r}; expected one "
+                             f"of {KV_DTYPES}")
+        if dt == "int4" and cfg.head_dim_ % 2:
+            raise ValueError(
+                f"{key}: kv_dtype='int4' packs two nibbles per byte along "
+                f"head_dim, which requires an even head_dim (got "
+                f"{cfg.head_dim_})")
+    return out
+
+
 def init_paged_caches(cfg: ModelConfig, n_pages: int, page_size: int,
-                      dtype) -> Dict[str, PagedKVCache]:
+                      dtype, kv_dtypes=None) -> Dict[str, PagedKVCache]:
     """Paged decode caches stacked over periods: {pos_i: [P, n_pages, ...]}.
 
     Only attention mixers page (KV grows with the sequence); Mamba state is
     O(1) per request and gains nothing from paging — models with mamba
     mixers serve through the dense-slot runtime instead.
+
+    ``kv_dtypes`` (see :func:`resolve_kv_dtypes`) picks each position's KV
+    page dtype: ``"fp16"`` keeps compute-dtype pages (today's layout, no
+    scales), ``"int8"``/``"int4"`` store quantized codes with per-(slot,
+    head) dequant scales riding inside the page allocation.
     """
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    resolved = resolve_kv_dtypes(cfg, kv_dtypes)
     caches: Dict[str, PagedKVCache] = {}
     for pos in range(cfg.period):
         if cfg.mixer_kind(pos) != "attn":
@@ -55,11 +100,55 @@ def init_paged_caches(cfg: ModelConfig, n_pages: int, page_size: int,
                 f"{pos} is {cfg.mixer_kind(pos)!r} (serve this arch with the "
                 f"slot runtime)"
             )
-        template = PagedKVCache.zeros(cfg, n_pages, page_size, dtype)
+        template = PagedKVCache.zeros(cfg, n_pages, page_size, dtype,
+                                      kv_dtype=resolved[f"pos_{pos}"])
         caches[f"pos_{pos}"] = jax.tree.map(
             lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), template
         )
     return caches
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: what a page / a token actually costs in pool memory
+# ---------------------------------------------------------------------------
+
+
+def kv_token_bytes(cfg: ModelConfig, kv_dtype: str, dtype=None) -> int:
+    """KV pool bytes ONE token costs at ONE layer under ``kv_dtype``.
+
+    fp pages: ``2 * kv * hd * itemsize(compute dtype)``.  Quantized pages:
+    one byte per code element (int4 packs two per byte) plus the two in-page
+    float16 scales per (token, kv head) — selfspec-calculator's
+    ``value_bytes_per_elem: 1, scale_bytes: 2`` memory model.
+    """
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    if kv_dtype == "fp16":
+        itemsize = jnp.dtype(dtype if dtype is not None
+                             else cfg.compute_dtype).itemsize
+        return 2 * kv * hd * itemsize
+    codes = hd // 2 if kv_dtype == "int4" else hd
+    scale = jnp.dtype(KV_SCALE_DTYPE).itemsize
+    return 2 * kv * (codes + scale)
+
+
+def kv_page_bytes(cfg: ModelConfig, page_size: int, kv_dtypes=None,
+                  dtype=None) -> int:
+    """Bytes ONE physical page costs across ALL layers (k+v+scales).
+
+    The pool allocates every layer's slice of a page together (one page id
+    indexes every per-position pool), so this is the allocator's true
+    granularity — what ``PagePool.stats()`` byte accounting is based on.
+    """
+    resolved = resolve_kv_dtypes(cfg, kv_dtypes)
+    per_layer = {k: kv_token_bytes(cfg, dt, dtype=dtype)
+                 for k, dt in resolved.items()}
+    return page_size * cfg.n_periods * sum(per_layer.values())
+
+
+def kv_cache_nbytes(caches) -> int:
+    """Actual device bytes of a paged-cache tree (every leaf, scales in)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(caches))
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -112,10 +201,14 @@ class PagePool:
     get handed to two requests, silently corrupting both requests' KV.
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, page_bytes: int = 0):
         if n_pages < 2:
             raise ValueError("pool needs >= 2 pages (page 0 is the garbage page)")
         self.n_pages = n_pages
+        # device bytes one physical page costs across every layer's pools
+        # (codes + in-page scales); 0 = unpriced (see kv_page_bytes). The
+        # scheduler sets it so stats() can report byte-level occupancy.
+        self.page_bytes = page_bytes
         self._free: deque = deque(range(1, n_pages))  # page 0 reserved
         self._ref: List[int] = [0] * n_pages
         self._allocs = 0
@@ -189,6 +282,10 @@ class PagePool:
             "shared_pages": self.shared_pages,
             "alloc_count": self._allocs,
             "free_count": self._frees,
+            "page_bytes": self.page_bytes,
+            "pool_bytes": self.page_bytes * self.n_pages,
+            "used_bytes": self.page_bytes * self.used_pages,
+            "free_bytes": self.page_bytes * self.free_pages,
         }
 
 

@@ -63,8 +63,12 @@ from repro.serve.kvcache import (
     copy_page,
     defrag,
     init_paged_caches,
+    kv_cache_nbytes,
+    kv_page_bytes,
+    kv_token_bytes,
     pad_position,
     pages_for,
+    resolve_kv_dtypes,
     rollback as kv_rollback,
     table_width,
 )
@@ -214,6 +218,8 @@ class PagedScheduler:
         spec: Optional[SpecConfig] = None,
         prefix_cache: bool = False,
         paged_attn: Optional[str] = None,
+        kv_dtype: Optional[str] = None,
+        kv_dtypes: Optional[Dict[str, str]] = None,
     ):
         if admission not in ("reserve", "optimistic"):
             raise ValueError(f"unknown admission policy {admission!r}")
@@ -222,6 +228,14 @@ class PagedScheduler:
             # backend; bake it in before any step/provider closure captures
             # cfg (plain decode, spec draft/verify and warmup all trace it)
             cfg = dataclasses.replace(cfg, paged_attn=paged_attn)
+        if kv_dtype is not None and kv_dtype != cfg.kv_dtype:
+            # same override pattern for the KV page precision: baked into cfg
+            # so spec draft providers and any cfg-derived pool agree with the
+            # scheduler's own pool
+            cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
+        # resolve + validate per-position KV dtypes ONCE, loudly, before any
+        # pool memory is allocated (unknown dtype / int4 with odd head_dim)
+        self.kv_dtypes = resolve_kv_dtypes(cfg, kv_dtypes)
         if spec is not None and not greedy:
             raise ValueError(
                 "speculative decoding verifies drafts by greedy acceptance; "
@@ -244,9 +258,12 @@ class PagedScheduler:
         self.stall_patience = stall_patience
         self.W = table_width(max_len, page_size)
         self.pad_pos = pad_position(max_len, page_size)
-        self.pool = PagePool(n_pages)
+        self.pool = PagePool(
+            n_pages,
+            page_bytes=kv_page_bytes(cfg, page_size, self.kv_dtypes))
         self.caches = shard_paged_caches(
-            init_paged_caches(cfg, n_pages, page_size, cfg.dtype())
+            init_paged_caches(cfg, n_pages, page_size, cfg.dtype(),
+                              kv_dtypes=self.kv_dtypes)
         )
         self.lanes: List[Optional[_Lane]] = [None] * batch_size
         self.queue: List[Request] = []
@@ -1020,6 +1037,22 @@ class PagedScheduler:
                 "trie_pages": pc.n_pages,
                 "cow_copies": self.cow_copies,
             }
+        # KV storage pricing: what a resident token costs at this pool's
+        # precision, and the capacity multiplier vs compute-dtype pages at
+        # equal pool bytes (1.0 when every position runs the fp16 escape
+        # hatch; ~itemsize(compute)*hd/(hd+2) per quantized position).
+        bpt = sum(kv_token_bytes(self.cfg, dt)
+                  for dt in self.kv_dtypes.values()) * self.cfg.n_periods
+        fp_bpt = (kv_token_bytes(self.cfg, "fp16") * len(self.kv_dtypes)
+                  * self.cfg.n_periods)
+        kv = {
+            "kv_dtypes": dict(self.kv_dtypes),
+            "bytes_per_token": bpt,
+            "fp_bytes_per_token": fp_bpt,
+            "capacity_multiplier": fp_bpt / bpt if bpt else 0.0,
+            "page_bytes": self.pool.page_bytes,
+            "pool_bytes": kv_cache_nbytes(self.caches),
+        }
         return {
             "runtime": "paged",
             "requests_done": len(self.done),
@@ -1031,6 +1064,7 @@ class PagedScheduler:
             "wall_s": wall,
             "tokens_per_s": self.out_tokens / wall if wall > 0 else 0.0,
             "pool": self.pool.stats(),
+            "kv": kv,
             "spec": spec,
             "prefix_cache": prefix,
             **latency_metrics(self.done.values()),
