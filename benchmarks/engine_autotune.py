@@ -42,6 +42,11 @@ from repro.core.engine import (
     timeable_backends,
 )
 
+try:
+    from stamp import bench_stamp
+except ImportError:  # running as a module from the repo root
+    from benchmarks.stamp import bench_stamp
+
 # Shrunk representatives for --quick (CI / CPU smoke): same buckets, less work.
 QUICK_SHAPES = {
     "dec:s": (4, 64, 128),
@@ -118,6 +123,11 @@ def main():
                  args.iters)
     out = args.out or default_cache_path()
     payload = {
+        # provenance stamp (git sha, seed, device, interpret flag, schema
+        # version) rides the cache like every other benchmark artifact; the
+        # explicit keys below win on collision so the loader contract
+        # ("version"/"registry"/"table") is unchanged
+        **bench_stamp(),
         "version": 1,
         "device": jax.default_backend(),
         # Stamp the backend registry this cache was tuned against: a loader

@@ -27,16 +27,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 
 import jax
 import numpy as np
 
 try:  # run as `python benchmarks/kv_quant.py` (script dir on path)
-    from stamp import bench_stamp
+    from stamp import stamp_and_write
 except ImportError:  # imported as a module from the repo root
-    from benchmarks.stamp import bench_stamp
+    from benchmarks.stamp import stamp_and_write
 
 from repro.configs.registry import ARCHS
 from repro.core.da import DAConfig
@@ -180,7 +178,6 @@ def main():
 
     result = {
         "bench": "kv_quant",
-        **bench_stamp(seed=0),
         "model": cfg.name,
         "quick": args.quick,
         "requests": n_requests,
@@ -189,9 +186,7 @@ def main():
         "equal_pool_bytes": int(budget),
         "fleets": results,
     }
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    stamp_and_write(args.out, result, seed=0)
     print(f"wrote {args.out}")
 
 

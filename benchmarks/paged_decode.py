@@ -27,8 +27,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import jax
@@ -36,9 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 try:  # run as `python benchmarks/paged_decode.py` (script dir on path)
-    from stamp import bench_stamp
+    from stamp import stamp_and_write
 except ImportError:  # imported as a module from the repo root
-    from benchmarks.stamp import bench_stamp
+    from benchmarks.stamp import stamp_and_write
 
 from repro.configs.registry import ARCHS
 from repro.core.da import DAConfig
@@ -160,7 +158,6 @@ def main():
 
     result = {
         "bench": "paged_decode",
-        **bench_stamp(seed=11),
         "model": cfg.name,
         "da_mode": "auto",
         "quick": args.quick,
@@ -176,9 +173,7 @@ def main():
         "gather_bytes_removed": gather_bytes["gather"] - gather_bytes["fused"],
         "tokens_identical": True,
     }
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    stamp_and_write(args.out, result, seed=11)
     print(f"decode speedup (fused vs gather): {result['decode_speedup']}x, "
           f"HLO gather bytes removed: {result['gather_bytes_removed']}")
     print(f"wrote {args.out}")

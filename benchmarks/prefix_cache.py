@@ -31,17 +31,15 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import jax
 import numpy as np
 
 try:  # run as `python benchmarks/prefix_cache.py` (script dir on path)
-    from stamp import bench_stamp
+    from stamp import stamp_and_write
 except ImportError:  # imported as a module from the repo root
-    from benchmarks.stamp import bench_stamp
+    from benchmarks.stamp import stamp_and_write
 
 from repro.configs.registry import ARCHS
 from repro.core.da import DAConfig
@@ -177,7 +175,6 @@ def main():
 
     result = {
         "bench": "prefix_cache",
-        **bench_stamp(seed=3),
         "model": cfg.name,
         "da_mode": "auto",
         "quick": args.quick,
@@ -194,9 +191,7 @@ def main():
                              - results["on"]["peak_pages"]),
         "tokens_identical": True,
     }
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    stamp_and_write(args.out, result, seed=3)
     print(f"ttft_p50 speedup: {result['ttft_p50_speedup']}x, "
           f"peak pages saved: {result['peak_pages_saved']}")
     print(f"wrote {args.out}")

@@ -23,17 +23,15 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import jax
 import numpy as np
 
 try:  # run as `python benchmarks/serve_throughput.py` (script dir on path)
-    from stamp import bench_stamp
+    from stamp import stamp_and_write
 except ImportError:  # imported as a module from the repo root
-    from benchmarks.stamp import bench_stamp
+    from benchmarks.stamp import stamp_and_write
 
 from repro.configs.registry import ARCHS
 from repro.core.da import DAConfig
@@ -221,7 +219,6 @@ def main():
 
     result = {
         "bench": "serve_decode",
-        **bench_stamp(seed=0),
         "model": cfg.name,
         "da_mode": "auto",
         "quick": args.quick,
@@ -229,9 +226,7 @@ def main():
         "decode": decode,
         "mixed_16": mixed,
     }
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    stamp_and_write(args.out, result, seed=0)
     print(f"wrote {args.out}")
 
 

@@ -38,17 +38,15 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import jax
 import numpy as np
 
 try:  # run as `python benchmarks/spec_decode.py` (script dir on sys.path)
-    from stamp import bench_stamp
+    from stamp import stamp_and_write
 except ImportError:  # imported as a module from the repo root
-    from benchmarks.stamp import bench_stamp
+    from benchmarks.stamp import stamp_and_write
 
 from repro.configs.registry import ARCHS
 from repro.core.da import DAConfig
@@ -170,7 +168,6 @@ def main():
 
     result = {
         "bench": "spec_decode",
-        **bench_stamp(seed=SEED),
         "model": cfg.name,
         "da_mode": "bitplane",
         "quick": args.quick,
@@ -189,9 +186,7 @@ def main():
         cfg, art.params, 1, max_new, max_len, ls, repeats, rng)
     print(f"layerskip b=1: {result['layerskip']['b1']}")
 
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    stamp_and_write(args.out, result, seed=SEED)
     print(f"wrote {args.out}")
 
 

@@ -1,8 +1,15 @@
 """Provenance stamp shared by the benchmark writers: git sha, seed, device,
-timestamp — so a BENCH_*.json trajectory is comparable across PRs (same
-workload, which build, which hardware, which randomness)."""
+Pallas execution mode, metrics schema version, timestamp — so a BENCH_*.json
+trajectory is comparable across PRs (same workload, which build, which
+hardware, which randomness, which kernel path).
+
+Every benchmark writes through :func:`stamp_and_write` — one stamping path,
+so a result file missing its provenance can't happen by forgetting a field.
+"""
 from __future__ import annotations
 
+import json
+import os
 import pathlib
 import subprocess
 import time
@@ -25,9 +32,30 @@ def bench_stamp(seed: Optional[int] = None) -> dict:
     """The common stamp block every benchmark JSON carries."""
     import jax
 
+    from repro.obs.metrics import METRICS_SCHEMA_VERSION
+
+    backend = jax.default_backend()
     return {
         "git_sha": git_sha(),
         "seed": seed,
-        "device": jax.default_backend(),
+        "device": backend,
+        # whether Pallas kernels ran interpreted (CPU/GPU correctness path)
+        # or compiled (TPU) — interpret-mode timings are NOT comparable to
+        # compiled ones, so the flag rides every result file
+        "pallas_interpret": backend != "tpu",
+        "metrics_schema_version": METRICS_SCHEMA_VERSION,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
     }
+
+
+def stamp_and_write(path: str, payload: dict,
+                    seed: Optional[int] = None) -> str:
+    """The one writer every benchmark result goes through: merge the
+    provenance stamp into ``payload`` (payload keys win on collision, so a
+    benchmark can pin e.g. its own seed field), create the artifacts
+    directory, dump pretty JSON.  Returns ``path``."""
+    result = {**bench_stamp(seed=seed), **payload}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    return path

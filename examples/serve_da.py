@@ -109,6 +109,12 @@ def main():
                     help="draft tokens per speculative round")
     ap.add_argument("--spec-draft-bits", type=int, default=4,
                     help="bit-planes the truncated-bitplane draft evaluates")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record lifecycle spans and write a Chrome "
+                         "trace_event JSON (loadable in Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the metrics registry in Prometheus text "
+                         "exposition format after the run")
     args = ap.parse_args()
     if args.save_artifact and args.mode == "float":
         raise SystemExit("--save-artifact requires a DA --mode (not float)")
@@ -126,6 +132,7 @@ def main():
         spec = SpecConfig(provider=args.spec, gamma=args.spec_gamma,
                           draft_x_bits=args.spec_draft_bits)
 
+    trace = args.trace_out is not None
     t0 = time.perf_counter()
     if args.artifact:
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
@@ -133,7 +140,7 @@ def main():
                                         page_size=args.page_size, spec=spec,
                                         prefix_cache=args.prefix_cache,
                                         paged_attn=args.paged_attn,
-                                        kv_dtype=args.kv_dtype)
+                                        kv_dtype=args.kv_dtype, trace=trace)
         cfg = eng.cfg
         print(f"cold boot from {args.artifact} in "
               f"{time.perf_counter()-t0:.1f}s (zero float weights, "
@@ -149,7 +156,7 @@ def main():
                           runtime=args.runtime, page_size=args.page_size,
                           spec=spec, prefix_cache=args.prefix_cache,
                           paged_attn=args.paged_attn,
-                          kv_dtype=args.kv_dtype)
+                          kv_dtype=args.kv_dtype, trace=trace)
         if args.mode != "float":
             print(f"pre-VMM freeze ({args.mode}) in "
                   f"{time.perf_counter()-t0:.1f}s:")
@@ -191,6 +198,11 @@ def main():
     for uid in sorted(done)[:4]:
         print(f"  req {uid}: {len(done[uid].generated)} tokens -> "
               f"{done[uid].generated[:8]}...")
+    if args.trace_out:
+        print(f"trace -> {eng.write_trace(args.trace_out)} "
+              f"({len(eng.obs.tracer)} events; open in Perfetto)")
+    if args.metrics_out:
+        print(f"metrics -> {eng.write_metrics(args.metrics_out)}")
 
 
 if __name__ == "__main__":

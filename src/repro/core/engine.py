@@ -722,12 +722,15 @@ def da_vmm(
 
 @partial(jax.jit, static_argnames=("cfg", "backend", "x_bits_eff"))
 def _da_matmul_jit(x2, packed, cfg, backend, x_bits_eff):
-    xqt = quantize_acts_signed(x2, bits=cfg.x_bits)
-    xq, rcfg, drop = truncate_codes(xqt.q, cfg, x_bits_eff)
-    acc = _REGISTRY[backend].fn(xq, packed, rcfg)
-    if drop:
-        acc = acc * (1 << drop)
-    return acc.astype(jnp.float32) * xqt.scale * packed.w_scale
+    # named_scope stamps the backend into the HLO metadata, so an XLA
+    # profiler capture attributes device time to the DA backend that spent it
+    with jax.named_scope(f"da_{backend}"):
+        xqt = quantize_acts_signed(x2, bits=cfg.x_bits)
+        xq, rcfg, drop = truncate_codes(xqt.q, cfg, x_bits_eff)
+        acc = _REGISTRY[backend].fn(xq, packed, rcfg)
+        if drop:
+            acc = acc * (1 << drop)
+        return acc.astype(jnp.float32) * xqt.scale * packed.w_scale
 
 
 def da_matmul(
@@ -903,6 +906,12 @@ def _fused_attn_backend(q, k_pool, v_pool, page_table, tpos, **kw):
 
 @partial(jax.jit, static_argnames=("cfg", "backends", "x_bits_eff", "splits"))
 def _da_qkv_jit(x2, packs, cfg, backends, x_bits_eff, splits):
+    # backend set in the HLO metadata → profiler attributes the fused pass
+    with jax.named_scope("da_qkv_" + "_".join(dict.fromkeys(backends))):
+        return _da_qkv_impl(x2, packs, cfg, backends, x_bits_eff, splits)
+
+
+def _da_qkv_impl(x2, packs, cfg, backends, x_bits_eff, splits):
     xqt = quantize_acts_signed(x2, bits=cfg.x_bits)
     xq, rcfg, drop = truncate_codes(xqt.q, cfg, x_bits_eff)
     if len(set(backends)) == 1 and not _REGISTRY[backends[0]].needs_luts:

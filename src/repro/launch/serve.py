@@ -72,6 +72,13 @@ def main():
                          "(default: half the stack)")
     ap.add_argument("--spec-draft-artifact", default=None, metavar="DIR",
                     help="frozen draft DAArtifact for --spec artifact")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record request/scheduler lifecycle spans and write "
+                         "a Chrome trace_event JSON here (load the file in "
+                         "Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the metrics registry here in Prometheus "
+                         "text exposition format after the run")
     args = ap.parse_args()
     if args.artifact and (args.save_artifact or args.quant != "none"
                           or args.smoke or args.arch):
@@ -101,6 +108,7 @@ def main():
                           draft_periods=args.spec_draft_periods,
                           draft_artifact=args.spec_draft_artifact)
 
+    trace = args.trace_out is not None
     if args.artifact:
         eng = ServeEngine.from_artifact(args.artifact, batch_size=args.batch,
                                         max_len=args.max_len,
@@ -108,7 +116,7 @@ def main():
                                         page_size=args.page_size, spec=spec,
                                         prefix_cache=args.prefix_cache,
                                         paged_attn=args.paged_attn,
-                                        kv_dtype=args.kv_dtype)
+                                        kv_dtype=args.kv_dtype, trace=trace)
         cfg = eng.cfg
         print(f"arch={cfg.name} cold boot from {args.artifact} "
               f"(zero float weights, runtime={eng.runtime}, "
@@ -133,7 +141,8 @@ def main():
                           max_len=args.max_len, da_mode=mode,
                           runtime=args.runtime, page_size=args.page_size,
                           spec=spec, prefix_cache=args.prefix_cache,
-                          paged_attn=args.paged_attn, kv_dtype=args.kv_dtype)
+                          paged_attn=args.paged_attn, kv_dtype=args.kv_dtype,
+                          trace=trace)
         if mode is not None:
             rep = da_memory_report(eng.params, model_cfg=eng.cfg)
             print(f"pre-VMM freeze: {rep['da_matrices']} matrices"
@@ -183,6 +192,11 @@ def main():
         print(f"prefix-cache hit_rate={pm['hit_rate']:.2f} "
               f"cached_tokens={pm['cached_tokens']} "
               f"evictions={pm['evictions']} cow={pm['cow_copies']}")
+    if args.trace_out:
+        print(f"trace -> {eng.write_trace(args.trace_out)} "
+              f"({len(eng.obs.tracer)} events)")
+    if args.metrics_out:
+        print(f"metrics -> {eng.write_metrics(args.metrics_out)}")
 
 
 if __name__ == "__main__":

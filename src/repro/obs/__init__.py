@@ -1,0 +1,78 @@
+"""Observability layer for the serving runtime.
+
+``Observability`` bundles the two halves every instrumented component
+takes: a :class:`MetricsRegistry` (always-on counters/gauges/histograms;
+cheap enough to leave enabled) and a :class:`TraceRecorder` (structured
+event ring buffer; opt-in, off by default).  Engines build their own
+bundle so parallel engines in one process never share series.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.obs.metrics import (
+    COUNT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    METRICS_SCHEMA_VERSION,
+    MetricsRegistry,
+    TIME_BUCKETS,
+    default_registry,
+)
+from repro.obs.trace import (
+    SCHED_TRACK,
+    TraceEvent,
+    TraceRecorder,
+    default_tracer,
+    device_span,
+    request_track,
+)
+from repro.obs.export import (
+    chrome_trace,
+    prometheus_text,
+    validate_chrome_trace,
+    validate_prometheus_text,
+    write_chrome_trace,
+    write_prometheus,
+)
+
+
+@dataclasses.dataclass
+class Observability:
+    """Registry + tracer pair threaded through a serving stack."""
+
+    registry: MetricsRegistry
+    tracer: TraceRecorder
+
+    @classmethod
+    def make(cls, metrics: bool = True, trace: bool = False,
+             trace_capacity: int = 65536) -> "Observability":
+        return cls(registry=MetricsRegistry(enabled=metrics),
+                   tracer=TraceRecorder(capacity=trace_capacity,
+                                        enabled=trace))
+
+
+__all__ = [
+    "COUNT_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "METRICS_SCHEMA_VERSION",
+    "MetricsRegistry",
+    "Observability",
+    "SCHED_TRACK",
+    "TIME_BUCKETS",
+    "TraceEvent",
+    "TraceRecorder",
+    "chrome_trace",
+    "default_registry",
+    "default_tracer",
+    "device_span",
+    "prometheus_text",
+    "request_track",
+    "validate_chrome_trace",
+    "validate_prometheus_text",
+    "write_chrome_trace",
+    "write_prometheus",
+]

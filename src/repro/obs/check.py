@@ -1,0 +1,50 @@
+"""CLI schema checker for exported observability artifacts.
+
+Usage (what CI runs after the traced serve smoke)::
+
+    python -m repro.obs.check trace.json metrics.prom
+
+Each path is validated by extension: ``*.json`` as a Chrome trace_event
+file, anything else as Prometheus text exposition.  Prints one line per
+artifact; exits nonzero on the first invalid one.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.obs.export import validate_chrome_trace, validate_prometheus_text
+
+
+def check_file(path: str) -> list:
+    if path.endswith(".json"):
+        with open(path) as f:
+            try:
+                obj = json.load(f)
+            except json.JSONDecodeError as e:
+                return [f"invalid JSON: {e}"]
+        return validate_chrome_trace(obj)
+    with open(path) as f:
+        return validate_prometheus_text(f.read())
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: python -m repro.obs.check <trace.json|metrics.prom>...")
+        return 2
+    rc = 0
+    for path in argv:
+        errs = check_file(path)
+        if errs:
+            rc = 1
+            print(f"FAIL {path}")
+            for e in errs[:20]:
+                print(f"  - {e}")
+        else:
+            print(f"OK   {path}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

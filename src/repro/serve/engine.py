@@ -35,9 +35,12 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import forward, init_caches
+from repro.obs import Observability, write_chrome_trace, write_prometheus
+from repro.obs.trace import request_track
 from repro.serve.scheduler import (  # noqa: F401  (Request re-exported)
     PagedScheduler,
     Request,
+    base_metrics,
     latency_metrics,
     mk_positions,
     pow2_bucket,
@@ -109,7 +112,8 @@ class _SlotRuntime:
     """Fixed-slot continuous batching over a dense [B, max_len] cache."""
 
     def __init__(self, cfg: ModelConfig, params: Any, batch_size: int,
-                 max_len: int, greedy: bool = True):
+                 max_len: int, greedy: bool = True,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
         self.params = params
         self.b = batch_size
@@ -122,11 +126,23 @@ class _SlotRuntime:
         # state — those archs prefill at exact prompt length
         self._bucketed = all(cfg.mixer_kind(p) == "attn"
                              for p in range(cfg.period))
-        self.prefill_compiles = 0
+        # same registry homing as the paged scheduler (prefill_compiles
+        # survives as a property — tests read it as an attribute)
+        self.obs = obs if obs is not None else Observability.make()
+        reg = self.obs.registry
+        self._tr = self.obs.tracer
+        self._c_prefill_compiles = reg.counter(
+            "slot_prefill_compiles", "per-slot prefill shape compiles")
+        self._c_out = reg.counter("sched_out_tokens", "tokens emitted")
+        self._h_ttft = reg.histogram(
+            "req_ttft_seconds", "submit to first token")
+        self._h_itl = reg.histogram(
+            "req_itl_seconds", "inter-token latency")
         base = make_prefill_into_slot(cfg, max_len)
 
         def counted(*a):
-            self.prefill_compiles += 1  # trace-time side effect = 1 / bucket
+            # trace-time side effect = 1 / bucket
+            self._c_prefill_compiles.inc()
             return base(*a)
 
         self._prefill_into = jax.jit(counted)
@@ -137,6 +153,10 @@ class _SlotRuntime:
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
 
+    @property
+    def prefill_compiles(self) -> int:
+        return int(self._c_prefill_compiles.total)
+
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
         if len(req.prompt) >= self.max_len:
@@ -146,6 +166,10 @@ class _SlotRuntime:
             )
         req.submit_t = time.perf_counter()
         self.queue.append(req)
+        if self._tr.enabled:
+            self._tr.instant("submit", request_track(req.uid),
+                             ts=req.submit_t, prompt_tokens=len(req.prompt),
+                             max_new_tokens=req.max_new_tokens)
 
     def _admit(self) -> None:
         for i in range(self.b):
@@ -163,6 +187,10 @@ class _SlotRuntime:
         compilations, not 10. Mamba/hybrid stacks use the exact length."""
         cfg = self.cfg
         t0 = len(req.prompt)
+        if self._tr.enabled:
+            self._tr.begin("running", request_track(req.uid), slot=i,
+                           prompt_tokens=t0)
+        t_pf = time.perf_counter()
         bucket = min(pow2_bucket(t0, lo=4), self.max_len) if self._bucketed \
             else t0
         toks = np.zeros((1, bucket), np.int32)
@@ -178,8 +206,15 @@ class _SlotRuntime:
         )
         now = time.perf_counter()
         req.first_token_t = now
+        self._h_ttft.observe(now - req.submit_t)
         req.token_times.append(now)
         req.generated.append(tok)
+        self._c_out.inc()
+        if self._tr.enabled:
+            track = request_track(req.uid)
+            self._tr.complete("prefill", track, t_pf, now - t_pf,
+                              tokens=t0, bucket=bucket)
+            self._tr.instant("token", track, ts=now, n=1)
         if req.on_token is not None:
             req.on_token(req.uid, tok)
         self.slots[i] = req
@@ -207,8 +242,14 @@ class _SlotRuntime:
             else:
                 key = jax.random.key((req.uid << 20) + len(req.generated))
                 tok = int(jax.random.categorical(key, logits[i]))
+            if req.token_times:
+                self._h_itl.observe(now - req.token_times[-1])
             req.token_times.append(now)
             req.generated.append(tok)
+            self._c_out.inc()
+            if self._tr.enabled:
+                self._tr.instant("token", request_track(req.uid), ts=now,
+                                 n=len(req.generated))
             if req.on_token is not None:
                 req.on_token(req.uid, tok)
             self.slot_len[i] += 1
@@ -218,6 +259,11 @@ class _SlotRuntime:
                 req.finish_t = now
                 self.done[req.uid] = req
                 self.slots[i] = None
+                if self._tr.enabled:
+                    track = request_track(req.uid)
+                    self._tr.instant("finish", track, ts=now,
+                                     tokens=len(req.generated))
+                    self._tr.end("running", track, ts=now)
         return len(active)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
@@ -250,11 +296,8 @@ class _SlotRuntime:
 
     def metrics(self) -> Dict[str, Any]:
         return {
-            "runtime": "slots",
-            "requests_done": len(self.done),
-            "out_tokens": sum(len(r.generated) for r in self.done.values()),
+            **base_metrics("slots", self.done, int(self._c_out.total)),
             "prefill_compiles": self.prefill_compiles,
-            **latency_metrics(self.done.values()),
         }
 
 
@@ -283,6 +326,8 @@ class ServeEngine:
         paged_attn: Optional[str] = None,
         kv_dtype: Optional[str] = None,
         kv_dtypes: Optional[Dict[str, str]] = None,
+        trace: bool = False,
+        obs: Optional[Observability] = None,
     ):
         # paged_attn: the paged-attention read backend — "gather" (XLA
         # page-table gather), "fused" (Pallas in-kernel page walk; interpret
@@ -312,6 +357,12 @@ class ServeEngine:
         # da_pin_modes=False keeps runtime shape dispatch on the frozen
         # artifact (prefill and decode may pick different backends) instead
         # of baking in the decode-bucket plan.
+        # trace: turn on the structured event recorder (request lifecycle +
+        # scheduler tick spans; export with write_trace()).  The metrics
+        # registry is always on — tracing is the opt-in half.  obs= hands in
+        # a pre-built Observability bundle instead (overrides trace=); each
+        # engine otherwise builds its own, so two engines in one process
+        # never share series.
         # Bake the KV precision into cfg BEFORE freezing, so the artifact's
         # model config and plan record the precision this engine serves at
         # (from_artifact then rebuilds a matching pool without being told).
@@ -340,6 +391,7 @@ class ServeEngine:
                            for p in range(cfg.period))
             runtime = "paged" if all_attn else "slots"
         self.runtime = runtime
+        self.obs = obs if obs is not None else Observability.make(trace=trace)
         if isinstance(spec, str):
             from repro.spec import SpecConfig
 
@@ -351,7 +403,7 @@ class ServeEngine:
                 prefill_chunk=prefill_chunk, prefill_lanes=prefill_lanes,
                 token_budget=token_budget, admission=admission, spec=spec,
                 prefix_cache=prefix_cache, paged_attn=paged_attn,
-                kv_dtypes=kv_dtypes,
+                kv_dtypes=kv_dtypes, obs=self.obs,
             )
         elif runtime == "slots":
             quantized = cfg.kv_dtype != "fp16" or any(
@@ -380,7 +432,8 @@ class ServeEngine:
                     "requests; the dense slot runtime has no page tables to "
                     "share — drop prefix_cache= or use runtime='paged'"
                 )
-            self._rt = _SlotRuntime(cfg, params, batch_size, max_len, greedy)
+            self._rt = _SlotRuntime(cfg, params, batch_size, max_len, greedy,
+                                    obs=self.obs)
         else:
             raise ValueError(f"unknown runtime {runtime!r} "
                              "(expected auto | paged | slots)")
@@ -476,6 +529,22 @@ class ServeEngine:
 
     def metrics(self) -> Dict[str, Any]:
         return self._rt.metrics()
+
+    # -- observability export ------------------------------------------------
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Flat registry snapshot (every counter/gauge/histogram series) —
+        the schema BENCH_*.json and the Prometheus exporter share."""
+        return self.obs.registry.snapshot()
+
+    def write_trace(self, path: str) -> str:
+        """Dump the recorded events as Chrome trace_event JSON (load the
+        file in Perfetto / chrome://tracing).  Requires trace=True (or an
+        enabled recorder via obs=) — an empty trace is written otherwise."""
+        return write_chrome_trace(path, self.obs.tracer)
+
+    def write_metrics(self, path: str) -> str:
+        """Dump the registry in Prometheus text exposition format."""
+        return write_prometheus(path, self.obs.registry)
 
 
 def _is_frozen(params: Any) -> bool:

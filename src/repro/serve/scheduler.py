@@ -55,6 +55,8 @@ import numpy as np
 from repro.launch.sharding import shard_paged_caches
 from repro.models.config import ModelConfig
 from repro.models.model import forward
+from repro.obs import Observability
+from repro.obs.trace import SCHED_TRACK, device_span, request_track
 from repro.serve.kvcache import (
     GARBAGE_PAGE,
     PagePool,
@@ -127,6 +129,21 @@ def latency_metrics(reqs) -> Dict[str, float]:
         "ttft_p50_ms": pct(ttft, 50),
         "itl_p50_ms": pct(itl, 50),
         "itl_p99_ms": pct(itl, 99),
+    }
+
+
+def base_metrics(runtime: str, done: Dict[int, Request],
+                 out_tokens: int) -> Dict[str, Any]:
+    """The ``metrics()`` core shared by both serving runtimes (the paged
+    scheduler and the legacy slot runtime): runtime tag, completion and
+    token totals, and the latency percentiles.  Runtime-specific sections
+    layer on top of this one dict — the two implementations must never
+    drift on the common keys."""
+    return {
+        "runtime": runtime,
+        "requests_done": len(done),
+        "out_tokens": out_tokens,
+        **latency_metrics(done.values()),
     }
 
 
@@ -220,6 +237,7 @@ class PagedScheduler:
         paged_attn: Optional[str] = None,
         kv_dtype: Optional[str] = None,
         kv_dtypes: Optional[Dict[str, str]] = None,
+        obs: Optional[Observability] = None,
     ):
         if admission not in ("reserve", "optimistic"):
             raise ValueError(f"unknown admission policy {admission!r}")
@@ -273,20 +291,60 @@ class PagedScheduler:
         # prefixes; hits skip prefill for cached pages and share them by
         # refcount (COW guards the last partial page)
         self.prefix = PrefixCache(page_size) if prefix_cache else None
-        # counters
-        self.steps = 0
-        self.out_tokens = 0
-        self.ctx_tokens = 0
-        self.preemptions = 0
-        self.step_compiles = 0
-        self.prefix_lookups = 0
-        self.prefix_hits = 0
-        self.cow_copies = 0
+        # counters — registry-homed so metrics(), the Prometheus exporter,
+        # and BENCH_*.json all read one source; the former plain attributes
+        # (self.steps, self.out_tokens, ...) survive as read-only properties
+        self.obs = obs if obs is not None else Observability.make()
+        reg = self.obs.registry
+        self._tr = self.obs.tracer
+        self._c_steps = reg.counter("sched_ticks", "scheduler ticks run")
+        self._c_out = reg.counter("sched_out_tokens", "tokens emitted")
+        self._c_ctx = reg.counter(
+            "sched_ctx_tokens", "context tokens written to the KV pool")
+        self._c_preempt = reg.counter(
+            "sched_preemptions", "lanes evicted back to the queue")
+        self._c_compiles = reg.counter(
+            "sched_step_compiles", "unified-step shape compiles")
+        self._c_pref_lookups = reg.counter(
+            "prefix_lookups", "admissions that consulted the prefix trie")
+        self._c_pref_hits = reg.counter(
+            "prefix_hits", "admissions that reused cached prefix pages")
+        self._c_cow = reg.counter(
+            "kv_cow_copies", "copy-on-write page copies")
+        self._g_lanes = reg.gauge("sched_live_lanes", "occupied batch rows")
+        self._g_queue = reg.gauge(
+            "sched_queue_depth", "requests waiting for admission")
+        self._g_used_pages = reg.gauge("kv_used_pages", "pool pages in use")
+        self._h_ttft = reg.histogram(
+            "req_ttft_seconds", "submit to first token")
+        self._h_itl = reg.histogram(
+            "req_itl_seconds", "inter-token latency")
+        self._h_tick = reg.histogram(
+            "sched_tick_seconds", "wall time of one scheduler tick")
+        self._c_draft_steps = reg.counter(
+            "spec_draft_steps", "draft-model steps issued")
+        self._c_verify_steps = reg.counter(
+            "spec_verify_steps", "batched verify calls issued")
+        self._c_spec_rounds = reg.counter(
+            "spec_rounds", "speculative rounds completed")
+        self._c_drafted = reg.counter(
+            "spec_drafted_tokens", "tokens proposed by the draft model")
+        self._c_accepted = reg.counter(
+            "spec_accepted_drafts", "draft tokens accepted by verify")
+        self._c_bonus = reg.counter(
+            "spec_bonus_tokens", "bonus tokens from fully-accepted windows")
+        self._c_spec_off = reg.counter(
+            "spec_disabled_requests", "requests whose speculation auto-off'd")
+        self._c_draft_compiles = reg.counter(
+            "spec_draft_compiles", "draft-step shape compiles")
+        self._c_verify_compiles = reg.counter(
+            "spec_verify_compiles", "verify-step shape compiles")
         self._start_t: Optional[float] = None
         base = make_paged_step(cfg)
 
         def counted(*a):
-            self.step_compiles += 1  # trace-time side effect = 1 per bucket
+            # trace-time side effect = 1 per bucket
+            self._c_compiles.inc()
             return base(*a)
 
         self._step = jax.jit(counted)
@@ -295,11 +353,6 @@ class PagedScheduler:
         self.spec = spec
         self._provider = None
         self.draft_caches = None
-        self.draft_steps = self.verify_steps = 0
-        self.spec_rounds = self.drafted_tokens = self.accepted_drafts = 0
-        self.bonus_tokens = 0
-        self.spec_disabled = 0
-        self.draft_compiles = self.verify_compiles = 0
         self._spec_state: Dict[int, Dict[str, Any]] = {}  # uid → EMA state
         if spec is not None:
             self._provider = make_provider(spec, cfg, params)
@@ -318,7 +371,7 @@ class PagedScheduler:
                                      self._provider.cfg, spec.gamma)
 
             def counted_draft(*a):
-                self.draft_compiles += 1
+                self._c_draft_compiles.inc()
                 return dbase(*a)
 
             self._draft_step = jax.jit(counted_draft)
@@ -329,17 +382,88 @@ class PagedScheduler:
                 ibase = self._provider.make_step()
 
                 def counted_ingest(*a):
-                    self.draft_compiles += 1
+                    self._c_draft_compiles.inc()
                     return ibase(*a)
 
                 self._draft_ingest = jax.jit(counted_ingest)
             vbase = make_verify_step(cfg)
 
             def counted_verify(*a):
-                self.verify_compiles += 1
+                self._c_verify_compiles.inc()
                 return vbase(*a)
 
             self._verify_step = jax.jit(counted_verify)
+
+    # -- registry-backed counter views ---------------------------------------
+    # The pre-registry attribute surface (tests and external tooling read
+    # e.g. ``sched.steps``) kept alive as int views over the registry series.
+    @property
+    def steps(self) -> int:
+        return int(self._c_steps.total)
+
+    @property
+    def out_tokens(self) -> int:
+        return int(self._c_out.total)
+
+    @property
+    def ctx_tokens(self) -> int:
+        return int(self._c_ctx.total)
+
+    @property
+    def preemptions(self) -> int:
+        return int(self._c_preempt.total)
+
+    @property
+    def step_compiles(self) -> int:
+        return int(self._c_compiles.total)
+
+    @property
+    def prefix_lookups(self) -> int:
+        return int(self._c_pref_lookups.total)
+
+    @property
+    def prefix_hits(self) -> int:
+        return int(self._c_pref_hits.total)
+
+    @property
+    def cow_copies(self) -> int:
+        return int(self._c_cow.total)
+
+    @property
+    def draft_steps(self) -> int:
+        return int(self._c_draft_steps.total)
+
+    @property
+    def verify_steps(self) -> int:
+        return int(self._c_verify_steps.total)
+
+    @property
+    def spec_rounds(self) -> int:
+        return int(self._c_spec_rounds.total)
+
+    @property
+    def drafted_tokens(self) -> int:
+        return int(self._c_drafted.total)
+
+    @property
+    def accepted_drafts(self) -> int:
+        return int(self._c_accepted.total)
+
+    @property
+    def bonus_tokens(self) -> int:
+        return int(self._c_bonus.total)
+
+    @property
+    def spec_disabled(self) -> int:
+        return int(self._c_spec_off.total)
+
+    @property
+    def draft_compiles(self) -> int:
+        return int(self._c_draft_compiles.total)
+
+    @property
+    def verify_compiles(self) -> int:
+        return int(self._c_verify_compiles.total)
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -358,6 +482,10 @@ class PagedScheduler:
             )
         req.submit_t = time.perf_counter()
         self.queue.append(req)
+        if self._tr.enabled:
+            self._tr.instant("submit", request_track(req.uid),
+                             ts=req.submit_t, prompt_tokens=t0,
+                             max_new_tokens=req.max_new_tokens)
 
     def _worst_pages(self, ctx_len: int, rem_new: int) -> int:
         return pages_for(min(ctx_len + max(rem_new, 0), self.max_len),
@@ -423,17 +551,25 @@ class PagedScheduler:
             self.queue.pop(0)
             pages: List[int] = []
             if self.prefix is not None:
-                self.prefix_lookups += 1
+                self._c_pref_lookups.inc()
                 # denominator of hit_rate: prompt tokens only — generated
                 # tokens of a re-admitted preempted request are never
                 # cacheable, so counting them would deflate the rate
                 self.prefix.lookup_tokens += len(req.prompt)
                 if hit_nodes:
                     pages = self.prefix.claim(hit_nodes, self.pool)
-                    self.prefix_hits += 1
+                    self._c_pref_hits.inc()
                     self.prefix.cached_tokens += hit
-            self.lanes[i] = _Lane(req=req, pages=pages, ctx=ctx, pos=hit,
-                                  admitted_t=time.perf_counter())
+            lane = _Lane(req=req, pages=pages, ctx=ctx, pos=hit,
+                         admitted_t=time.perf_counter())
+            self.lanes[i] = lane
+            if self._tr.enabled:
+                # one "running" span per residency period: begun here, ended
+                # by _preempt or the finish paths — span balance over a
+                # drained run is a tested invariant
+                self._tr.begin("running", request_track(req.uid),
+                               ts=lane.admitted_t, lane=i, ctx_tokens=len(ctx),
+                               prefix_hit_tokens=hit)
 
     # -- preemption / eviction -----------------------------------------------
     def _preempt(self, i: int) -> None:
@@ -445,7 +581,12 @@ class PagedScheduler:
         self.queue.insert(0, lane.req)
         self._preempted.add(lane.req.uid)
         self.lanes[i] = None
-        self.preemptions += 1
+        self._c_preempt.inc()
+        if self._tr.enabled:
+            track = request_track(lane.req.uid)
+            self._tr.instant("preempt", track,
+                             generated=len(lane.req.generated))
+            self._tr.end("running", track)
 
     def _youngest_other(self, i: int) -> Optional[int]:
         cands = [(j, l) for j, l in enumerate(self.lanes)
@@ -501,7 +642,7 @@ class PagedScheduler:
             self.caches = copy_page(self.caches, src, dst)
         lane.pages[idx] = dst
         self.pool.free([src])  # drop the lane's reference on the shared page
-        self.cow_copies += 1
+        self._c_cow.inc()
         return True
 
     def _maybe_cache_prefix(self, lane: _Lane) -> None:
@@ -544,7 +685,10 @@ class PagedScheduler:
             return 0
         if self._start_t is None:
             self._start_t = time.perf_counter()
-        self.steps += 1
+        self._c_steps.inc()
+        t_tick = time.perf_counter()
+        allocs0, cow0 = self.pool._allocs, self._c_cow.total
+        evict0 = self.prefix.evictions if self.prefix is not None else 0
 
         progressed: set = set()
         decode_count = sum(1 for _, l in active if l.remaining == 1)
@@ -576,7 +720,24 @@ class PagedScheduler:
                 l.stalled_steps += 1
                 if l.stalled_steps > self.stall_patience:
                     self._preempt(i)  # stalled: hand its pages to the rest
-        return sum(l is not None for l in self.lanes)
+        live = sum(l is not None for l in self.lanes)
+        now = time.perf_counter()
+        self._h_tick.observe(now - t_tick)
+        self._g_lanes.set(live)
+        self._g_queue.set(len(self.queue))
+        self._g_used_pages.set(self.pool.used_pages)
+        if self._tr.enabled:
+            evict1 = (self.prefix.evictions if self.prefix is not None
+                      else 0)
+            self._tr.complete(
+                "tick", SCHED_TRACK, t_tick, now - t_tick,
+                lanes=live, decode_lanes=decode_count,
+                prefill_lanes=len(prefill), queue=len(self.queue),
+                pages_allocated=self.pool._allocs - allocs0,
+                cow_copies=int(self._c_cow.total - cow0),
+                prefix_evictions=evict1 - evict0,
+                used_pages=self.pool.used_pages)
+        return live
 
     def _run_batch(self, rows, plan, n_rows: int, t_step: int) -> np.ndarray:
         """Issue one call of the unified step for ``rows`` = [(batch_row,
@@ -593,11 +754,12 @@ class PagedScheduler:
             positions[r, :n] = np.arange(l.pos, l.pos + n)
             last_idx[r] = n - 1
             table[r, : len(l.pages)] = l.pages
-        logits, self.caches = self._step(
-            self.params, self.caches, jnp.asarray(tokens),
-            mk_positions(self.cfg, jnp.asarray(positions)),
-            jnp.asarray(table), jnp.asarray(last_idx),
-        )
+        with device_span(f"paged_step[{n_rows}x{t_step}]", self._tr.enabled):
+            logits, self.caches = self._step(
+                self.params, self.caches, jnp.asarray(tokens),
+                mk_positions(self.cfg, jnp.asarray(positions)),
+                jnp.asarray(table), jnp.asarray(last_idx),
+            )
         return np.asarray(logits)
 
     def _prefill_phase(self, prefill, decode_count: int) -> set:
@@ -627,11 +789,18 @@ class PagedScheduler:
         # warmup() compiled, not a one-off pow2 round-up
         t_step = min(pow2_bucket(max(plan[i] for _, i, _ in rows)),
                      self.prefill_chunk)
+        t0 = time.perf_counter()
         logits = self._run_batch(rows, plan, self.prefill_lanes, t_step)
         now = time.perf_counter()
+        if self._tr.enabled:
+            for r, i, l in rows:
+                self._tr.complete("prefill_chunk", request_track(l.req.uid),
+                                  t0, now - t0, tokens=plan[i], pos=l.pos)
+            self._tr.complete("prefill", SCHED_TRACK, t0, now - t0,
+                              lanes=len(rows), t_step=t_step)
         for r, i, l in rows:
             l.pos += plan[i]
-            self.ctx_tokens += plan[i]
+            self._c_ctx.inc(plan[i])
             self._maybe_cache_prefix(l)  # before _sample can free the pages
             if l.remaining == 0:  # chunk covered the last unseen token
                 self._sample(i, l, logits[r], now)
@@ -662,11 +831,15 @@ class PagedScheduler:
         # batch rows, so a half-empty batch never pays full-width compute)
         width = width_bucket(len(live), self.b)
         rows = [(r, i, l) for r, (i, l) in enumerate(live)]
+        t0 = time.perf_counter()
         logits = self._run_batch(rows, plan, width, 1)
         now = time.perf_counter()
+        if self._tr.enabled:
+            self._tr.complete("decode", SCHED_TRACK, t0, now - t0,
+                              lanes=len(live), width=width)
         for r, i, l in rows:
             l.pos += 1
-            self.ctx_tokens += 1
+            self._c_ctx.inc()
             self._maybe_cache_prefix(l)  # before _sample can free the pages
             self._sample(i, l, logits[r], now)
         return {i for i, _ in live}
@@ -751,7 +924,7 @@ class PagedScheduler:
             self.caches = new
         else:
             self.draft_caches = new
-        self.draft_steps += self.spec.gamma
+        self._c_draft_steps.inc(self.spec.gamma)
         return np.asarray(drafts)
 
     def _run_ingest(self, rows, toks, poss, width: int, t_step: int) -> None:
@@ -798,7 +971,7 @@ class PagedScheduler:
             mk_positions(self.cfg, jnp.asarray(positions)),
             jnp.asarray(table),
         )
-        self.verify_steps += 1
+        self._c_verify_steps.inc()
         return np.asarray(logits)  # [width, t_step, V]
 
     def _spec_phase(self, staged) -> set:
@@ -815,6 +988,7 @@ class PagedScheduler:
         poss: Dict[int, List[int]] = {}
         drafts: Dict[int, List[int]] = {}
         start_pos: Dict[int, int] = {}
+        t0 = time.perf_counter()
         # one fused draft call: catch-up feed (own-cache providers ingest
         # what the target accepted since their last round; anything longer
         # than a prefill chunk was pre-ingested in bucketed slices) + gamma
@@ -847,12 +1021,16 @@ class PagedScheduler:
             l.pos = start_pos[i] + emitted
             # own-cache draft KV is valid for the matched prefix only
             l.draft_pos = min(start_pos[i] + g, l.pos)
-            self.ctx_tokens += emitted
-            self.spec_rounds += 1
-            self.drafted_tokens += g
-            self.accepted_drafts += m - 1
+            self._c_ctx.inc(emitted)
+            self._c_spec_rounds.inc()
+            self._c_drafted.inc(g)
+            self._c_accepted.inc(m - 1)
             if m == g + 1:
-                self.bonus_tokens += 1
+                self._c_bonus.inc()
+            if self._tr.enabled:
+                self._tr.complete("spec_round", request_track(l.req.uid),
+                                  t0, now - t0, drafted=g, accepted=m - 1,
+                                  emitted=emitted)
             self._update_spec_state(l.req.uid, (m - 1) / g)
             if self.lanes[i] is l:  # still running: release rejected pages
                 kv_rollback(self.pool, l.pages, ckpts[i],
@@ -869,11 +1047,19 @@ class PagedScheduler:
         for tok in tokens:
             if not req.generated:
                 req.first_token_t = now
+                self._h_ttft.observe(now - req.submit_t)
+            elif req.token_times:
+                self._h_itl.observe(now - req.token_times[-1])
             req.token_times.append(now)
             req.generated.append(tok)
             lane.ctx.append(tok)
             emitted += 1
-            self.out_tokens += 1
+            self._c_out.inc()
+            if self._tr.enabled:
+                # stamped with the SAME clock value written to token_times,
+                # so trace-derived TTFT/ITL equal latency_metrics() exactly
+                self._tr.instant("token", request_track(req.uid), ts=now,
+                                 n=len(req.generated))
             if req.on_token is not None:
                 req.on_token(req.uid, tok)
             if (tok == req.eos_id
@@ -883,6 +1069,11 @@ class PagedScheduler:
                 self.pool.free(lane.pages)
                 self.done[req.uid] = req
                 self.lanes[i] = None
+                if self._tr.enabled:
+                    track = request_track(req.uid)
+                    self._tr.instant("finish", track, ts=now,
+                                     tokens=len(req.generated))
+                    self._tr.end("running", track, ts=now)
                 break
         return emitted
 
@@ -896,7 +1087,7 @@ class PagedScheduler:
         if (st["on"] and st["rounds"] >= self.spec.warmup_rounds
                 and st["ema"] < self._spec_floor):
             st["on"] = False
-            self.spec_disabled += 1
+            self._c_spec_off.inc()
 
     def _sample(self, i: int, lane: _Lane, row: np.ndarray, now: float) -> None:
         req = lane.req
@@ -907,10 +1098,17 @@ class PagedScheduler:
             tok = int(jax.random.categorical(key, jnp.asarray(row)))
         if not req.generated:
             req.first_token_t = now
+            self._h_ttft.observe(now - req.submit_t)
+        elif req.token_times:
+            self._h_itl.observe(now - req.token_times[-1])
         req.token_times.append(now)
         req.generated.append(tok)
         lane.ctx.append(tok)
-        self.out_tokens += 1
+        self._c_out.inc()
+        if self._tr.enabled:
+            # same clock value as token_times → exact TTFT/ITL reconstruction
+            self._tr.instant("token", request_track(req.uid), ts=now,
+                             n=len(req.generated))
         if req.on_token is not None:
             req.on_token(req.uid, tok)
         finished = (
@@ -923,6 +1121,11 @@ class PagedScheduler:
             self.pool.free(lane.pages)
             self.done[req.uid] = req
             self.lanes[i] = None
+            if self._tr.enabled:
+                track = request_track(req.uid)
+                self._tr.instant("finish", track, ts=now,
+                                 tokens=len(req.generated))
+                self._tr.end("running", track, ts=now)
 
     def run(self, max_steps: int = 100_000) -> Dict[int, Request]:
         for _ in range(max_steps):
@@ -1045,27 +1248,31 @@ class PagedScheduler:
                   for dt in self.kv_dtypes.values()) * self.cfg.n_periods
         fp_bpt = (kv_token_bytes(self.cfg, "fp16") * len(self.kv_dtypes)
                   * self.cfg.n_periods)
+        # one source for byte accounting: the pool's own stats feed both the
+        # "pool" section and the kv section's byte keys ("pool_bytes" stays
+        # the measured device-array footprint, which the sharded caches can
+        # pad past page_bytes * n_pages)
+        pool_stats = self.pool.stats()
         kv = {
             "kv_dtypes": dict(self.kv_dtypes),
             "bytes_per_token": bpt,
             "fp_bytes_per_token": fp_bpt,
             "capacity_multiplier": fp_bpt / bpt if bpt else 0.0,
-            "page_bytes": self.pool.page_bytes,
+            "page_bytes": pool_stats["page_bytes"],
+            "used_bytes": pool_stats["used_bytes"],
+            "free_bytes": pool_stats["free_bytes"],
             "pool_bytes": kv_cache_nbytes(self.caches),
         }
         return {
-            "runtime": "paged",
-            "requests_done": len(self.done),
-            "out_tokens": self.out_tokens,
+            **base_metrics("paged", self.done, self.out_tokens),
             "ctx_tokens": self.ctx_tokens,
             "steps": self.steps,
             "preemptions": self.preemptions,
             "step_compiles": self.step_compiles,
             "wall_s": wall,
             "tokens_per_s": self.out_tokens / wall if wall > 0 else 0.0,
-            "pool": self.pool.stats(),
+            "pool": pool_stats,
             "kv": kv,
             "spec": spec,
             "prefix_cache": prefix,
-            **latency_metrics(self.done.values()),
         }
