@@ -21,8 +21,8 @@ import numpy as np
 from repro.configs.registry import ARCHS, reduce_for_smoke
 from repro.core import DAConfig
 from repro.core.freeze import da_memory_report, freeze_model
-from repro.core.hwmodel import DADesign
 from repro.models.model import forward, init_model
+from repro.obs.hwcost import HardwareCostModel, da_design
 
 
 def run(archs=("qwen3-8b", "qwen2-moe-a2.7b", "mamba2-780m")) -> list:
@@ -56,20 +56,23 @@ def run(archs=("qwen3-8b", "qwen2-moe-a2.7b", "mamba2-780m")) -> list:
             row["code_bytes"] / 1e3,
         ))
 
-    # hardware projection for the real (full-size) layer shapes of qwen3-8b
+    # hardware projection for the real (full-size) layer shapes of qwen3-8b,
+    # priced by the same HardwareCostModel the serving scheduler uses
     full = ARCHS["qwen3-8b"]
-    for label, k, n in [
+    shapes = [
         ("qkv_proj", full.d_model, full.q_dim + 2 * full.kv_dim),
         ("mlp_up", full.d_model, full.d_ff),
         ("mlp_down", full.d_ff, full.d_model),
         ("lm_head", full.d_model, full.vocab),
-    ]:
-        d = DADesign(k=k, n=n)
+    ]
+    hwm = HardwareCostModel.from_shapes(shapes)
+    for row in hwm.layer_table():
+        d = da_design(row["k"], row["n"])
         rows.append((
-            f"hw_{label}_{k}x{n}",
+            f"hw_{row['path']}_{row['k']}x{row['n']}",
             d.n_arrays,
-            d.latency_ns(),
-            d.energy_vmm_j() * 1e9,
+            row["da_ns"],
+            row["da_pj"] * 1e-3,  # nJ
         ))
     return rows
 

@@ -3,14 +3,43 @@
 Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints the
 per-cell three-term roofline, dominant bottleneck, MODEL_FLOPS/HLO ratio and
 roofline fraction. Does not compile anything itself.
+
+``--artifact DIR`` instead prints the frozen artifact's per-layer DA
+hardware cost table (the same ``HardwareCostModel`` rows the scheduler
+prices serving with — geometry, pJ/ns per token, bit-slicing
+counterfactual): the roofline view of the paper's hardware rather than of
+the XLA compile.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
 
 ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def print_hw_table(artifact_dir: str) -> None:
+    from repro.core.freeze import load_artifact
+
+    art = load_artifact(artifact_dir)
+    hwm = art.hwcost
+    if not hwm:
+        print(f"# {artifact_dir}: artifact carries no DA cost model")
+        return
+    print("# layer,k,n,mode,vmms_per_token,da_pj,da_ns,bs_pj,bs_ns,"
+          "energy_ratio,latency_ratio")
+    for r in hwm.layer_table():
+        print(f"{r['path']},{r['k']},{r['n']},{r['mode']},"
+              f"{r['vmms_per_token']},{r['da_pj']:.4g},{r['da_ns']:.4g},"
+              f"{r['bs_pj']:.4g},{r['bs_ns']:.4g},"
+              f"{r['bs_pj']/r['da_pj']:.3g},{r['bs_ns']/r['da_ns']:.3g}")
+    s = hwm.summary()
+    print(f"# total: {s['pj_per_token']:.4g} pJ/token "
+          f"{s['ns_per_token']:.4g} ns/token over {s['layers']} layers; "
+          f"vs bit-sliced x{s['ratios']['energy']:.2f} energy "
+          f"x{s['ratios']['latency']:.2f} latency")
 
 
 def load_cells(pattern: str = "*.json") -> list:
@@ -22,6 +51,14 @@ def load_cells(pattern: str = "*.json") -> list:
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="print the per-layer DA hardware cost table of a "
+                         "frozen artifact instead of the dry-run roofline")
+    args = ap.parse_args()
+    if args.artifact:
+        print_hw_table(args.artifact)
+        return
     cells = load_cells()
     if not cells:
         print(f"# no dry-run artifacts under {ART} — run "

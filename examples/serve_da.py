@@ -115,6 +115,11 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="FILE",
                     help="write the metrics registry in Prometheus text "
                          "exposition format after the run")
+    ap.add_argument("--hw-metrics", nargs="?", const="-", default=None,
+                    metavar="FILE",
+                    help="print what the run would have cost on the paper's "
+                         "DA hardware (metrics()['hw']); with FILE, also "
+                         "write the block as schema-stamped JSON")
     args = ap.parse_args()
     if args.save_artifact and args.mode == "float":
         raise SystemExit("--save-artifact requires a DA --mode (not float)")
@@ -198,6 +203,20 @@ def main():
     for uid in sorted(done)[:4]:
         print(f"  req {uid}: {len(done[uid].generated)} tokens -> "
               f"{done[uid].generated[:8]}...")
+    if args.hw_metrics:
+        hm = eng.metrics().get("hw")
+        if hm is None:
+            print("hw: no DA cost model (--mode float has no DA geometry)")
+        else:
+            live = hm["live"]
+            print(f"hw: {hm['pj_per_token']:.3e} pJ/token over "
+                  f"{hm['layers']} DA layers; this run "
+                  f"{live['da_pj']:.3e} pJ vs bit-sliced "
+                  f"{live['bitslice_pj']:.3e} pJ "
+                  f"(x{live['energy_ratio']:.1f} energy, "
+                  f"x{live['latency_ratio']:.2f} latency)")
+        if args.hw_metrics != "-":
+            print(f"hw metrics -> {eng.write_hw_metrics(args.hw_metrics)}")
     if args.trace_out:
         print(f"trace -> {eng.write_trace(args.trace_out)} "
               f"({len(eng.obs.tracer)} events; open in Perfetto)")

@@ -53,7 +53,17 @@ from repro.core.engine import (
     registry_fingerprint,
     shape_bucket,
 )
-from repro.core.hwmodel import DADesign, T_ADD_STAGE, T_READ_PIPE
+from repro.core.hwmodel import T_ADD_STAGE, T_READ_PIPE
+
+
+def _hwcost():
+    """Deferred import: ``repro.obs.hwcost`` imports ``core.hwmodel``,
+    and importing the ``repro.core`` package imports this module — a
+    module-level import would be circular whenever ``obs.hwcost`` is
+    the first thing a process imports."""
+    from repro.obs import hwcost
+
+    return hwcost
 
 #: Artifact schema version — bumped on any layout/manifest change.
 ARTIFACT_VERSION = 1
@@ -132,6 +142,11 @@ class DAArtifact:
                sizes may differ — each PackedWeights carries its own cfg).
     model_cfg: the ModelConfig needed to rebuild the serving graph, or None
                for bare trees (round-tripped through the manifest).
+    hwcost:    :class:`~repro.obs.hwcost.HardwareCostModel` pricing every
+               packed leaf on the paper's DA circuits (and the bit-slicing
+               counterfactual).  Built at freeze time, carried in the
+               manifest, rebuilt from the packed params when loading older
+               artifacts that predate it.
     """
 
     params: Any
@@ -139,6 +154,7 @@ class DAArtifact:
     da_cfg: DAConfig
     model_cfg: Any = None
     version: int = ARTIFACT_VERSION
+    hwcost: Optional["HardwareCostModel"] = None
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +181,8 @@ def analytic_costs(
     mac_sweep = float(m) * k * n * T_ADD_STAGE
     w_read = float(k) * n * T_READ_PIPE
     if has_luts:
-        d = DADesign(k=k, n=n, x_bits=x_bits, base_group=cfg.group_size)
+        d = _hwcost().da_design(k, n, x_bits=x_bits,
+                                group_size=cfg.group_size)
         readout = m * d.latency_ns()
         costs["lut"] = readout
         costs["pallas_lut"] = readout
@@ -364,7 +381,9 @@ def freeze_model(
         treedef, [walk(path, leaf) for path, leaf in flat]
     )
     return DAArtifact(params=packed, plan=plans, da_cfg=da_cfg,
-                      model_cfg=model_cfg)
+                      model_cfg=model_cfg,
+                      hwcost=_hwcost().HardwareCostModel.from_frozen(
+                          packed, plans))
 
 
 def freeze_model_da(
@@ -401,6 +420,8 @@ def save_artifact(directory: str, artifact: DAArtifact) -> str:
         "plan": {k: p.to_json() for k, p in artifact.plan.items()},
         "registry": registry_fingerprint(),
     }
+    if artifact.hwcost:
+        extra["hwcost"] = artifact.hwcost.to_json()
     if artifact.model_cfg is not None:
         extra["model_cfg"] = dataclasses.asdict(artifact.model_cfg)
     return ckpt.save_tree(directory, artifact.params, extra_manifest=extra)
@@ -455,9 +476,15 @@ def load_artifact(directory: str) -> DAArtifact:
             if raw.get(key) is not None:
                 raw[key] = tuple(raw[key])
         model_cfg = ModelConfig(**raw)
+    if "hwcost" in manifest:
+        hwcost = _hwcost().HardwareCostModel.from_json(
+            manifest["hwcost"])
+    else:  # pre-hwcost artifact: geometry is all in the packed leaves
+        hwcost = _hwcost().HardwareCostModel.from_frozen(params, plan)
     return DAArtifact(params=params, plan=plan, da_cfg=da_cfg,
                       model_cfg=model_cfg,
-                      version=manifest.get("artifact_version", 1))
+                      version=manifest.get("artifact_version", 1),
+                      hwcost=hwcost)
 
 
 def _demote_stale_modes(params: Any, stale: set) -> Any:
@@ -483,7 +510,11 @@ def da_memory_report(frozen_params: Any, model_cfg: Any = None,
     Besides the aggregate cell counts, ``"layers"`` lists every packed matrix
     with its plan decision (mode chosen, group size) and its storage split
     (int8 code bytes vs int32 LUT bytes), so the 2^L/L blow-up is
-    inspectable layer by layer, not just in aggregate.
+    inspectable layer by layer, not just in aggregate.  Each layer row also
+    carries its :mod:`repro.obs.hwcost` price (``da_pj`` / ``da_ns`` per
+    token-pass, plus the bit-slicing counterfactual), and ``"hw"`` holds the
+    model-total :meth:`HardwareCostModel.summary` — the same table serving
+    ``metrics()["hw"]``, ONE source of geometry truth.
 
     Pass ``model_cfg`` (all-attention archs) to additionally get a ``"kv"``
     section pricing the OTHER resident tensor beside the DA weights — the
@@ -493,6 +524,8 @@ def da_memory_report(frozen_params: Any, model_cfg: Any = None,
     """
     weights = luts = mats = 0
     layers = []
+    hwm = _hwcost().HardwareCostModel.from_frozen(frozen_params)
+    hw_rows = {r["path"]: r for r in hwm.layer_table()}
     flat, _ = jax.tree_util.tree_flatten_with_path(
         frozen_params, is_leaf=lambda x: isinstance(x, PackedWeights)
     )
@@ -503,6 +536,7 @@ def da_memory_report(frozen_params: Any, model_cfg: Any = None,
         weights += leaf.wq.size
         lut_sz = leaf.luts.size if leaf.luts is not None else 0
         luts += lut_sz
+        hw_row = hw_rows.get(_path_key(path), {})
         layers.append({
             "layer": _path_key(path),
             "mode": leaf.mode,
@@ -515,6 +549,11 @@ def da_memory_report(frozen_params: Any, model_cfg: Any = None,
             "lut_bytes": int(lut_sz) * (leaf.luts.dtype.itemsize
                                         if leaf.luts is not None else 0),
             "cell_blowup": (lut_sz / leaf.wq.size) if leaf.wq.size else 0.0,
+            "vmms_per_token": hw_row.get("vmms_per_token", 1),
+            "da_pj": hw_row.get("da_pj", 0.0),
+            "da_ns": hw_row.get("da_ns", 0.0),
+            "bs_pj": hw_row.get("bs_pj", 0.0),
+            "bs_ns": hw_row.get("bs_ns", 0.0),
         })
     report = {
         "da_matrices": mats,
@@ -522,6 +561,7 @@ def da_memory_report(frozen_params: Any, model_cfg: Any = None,
         "lut_cells": luts,
         "cell_blowup": (luts / weights) if weights else 0.0,
         "layers": layers,
+        "hw": hwm.summary() if hwm else None,
     }
     if model_cfg is not None and all(
             model_cfg.mixer_kind(p) == "attn"

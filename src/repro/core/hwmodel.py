@@ -216,6 +216,19 @@ class DADesign:
         adds = self.x_bits * adder_bits * E_ADD_PER_BIT
         return reads + adds
 
+    def energy_components_j(self) -> dict:
+        """Per-VMM energy split: SA sensing, array periphery (decoder/WL/
+        clock overhead, the CONV1-calibrated term), and the adder datapath.
+        Every term is linear in ``x_bits`` — a truncated-bitplane pass at
+        fewer input bits costs exactly proportionally less."""
+        cycles = self.n_sense_amps * self.x_bits
+        adder_bits = self.n * sum(self.adder_widths)
+        return {
+            "sense": cycles * E_SENSE,
+            "array_overhead": cycles * E_ARRAY_OVERHEAD,
+            "adder": self.x_bits * adder_bits * E_ADD_PER_BIT,
+        }
+
     def pre_vmm_energy_j(self) -> float:
         """Once-in-a-lifetime weight summation + ReRAM write (§III-D).
 
@@ -308,6 +321,18 @@ class BitSliceDesign:
             + self.n * sum(self.adder_widths) * E_ADD_PER_BIT
         )
         return self.x_bits * per_cycle
+
+    def energy_components_j(self) -> dict:
+        """Per-VMM energy split: BL reads, I-V + ADC conversions, DAC
+        drive, and the shift-and-add datapath — all per input-bit cycle,
+        so every term scales linearly in ``x_bits`` too."""
+        return {
+            "read": self.x_bits * self.n_adcs * E_READ_COL_CYCLE,
+            "adc": self.x_bits * self.n_adcs * E_ADC_IV * self._adc_scale,
+            "dac": self.x_bits * self.n_dacs * E_DAC,
+            "adder": (self.x_bits * self.n * sum(self.adder_widths)
+                      * E_ADD_PER_BIT),
+        }
 
     def transistors(self) -> float:
         return (

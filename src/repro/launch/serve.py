@@ -79,6 +79,13 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="FILE",
                     help="write the metrics registry here in Prometheus "
                          "text exposition format after the run")
+    ap.add_argument("--hw-metrics", nargs="?", const="-", default=None,
+                    metavar="FILE",
+                    help="print the DA hardware-cost estimate "
+                         "(metrics()['hw']: pJ/token, component breakdown, "
+                         "live DA-vs-bitslice ratios) after the run; with "
+                         "FILE, also write it as schema-stamped JSON "
+                         "(validated by python -m repro.obs.check)")
     args = ap.parse_args()
     if args.artifact and (args.save_artifact or args.quant != "none"
                           or args.smoke or args.arch):
@@ -192,6 +199,25 @@ def main():
         print(f"prefix-cache hit_rate={pm['hit_rate']:.2f} "
               f"cached_tokens={pm['cached_tokens']} "
               f"evictions={pm['evictions']} cow={pm['cow_copies']}")
+    if args.hw_metrics:
+        hm = eng.metrics().get("hw")
+        if hm is None:
+            print("hw: no DA cost model (float weights) — freeze with a DA "
+                  "--quant mode or boot an --artifact")
+        else:
+            live = hm["live"]
+            print(f"hw: {hm['pj_per_token']:.3e} pJ/token "
+                  f"{hm['ns_per_token']:.3e} ns/token over "
+                  f"{hm['layers']} DA layers; executed "
+                  f"{live['da_pj']:.3e} pJ "
+                  f"(bit-sliced would be {live['bitslice_pj']:.3e} pJ — "
+                  f"x{live['energy_ratio']:.1f} energy, "
+                  f"x{live['latency_ratio']:.2f} latency)")
+            comp = hm["components"]
+            print("hw components/token: "
+                  + " ".join(f"{k}={v:.3e}" for k, v in comp.items()))
+        if args.hw_metrics != "-":
+            print(f"hw metrics -> {eng.write_hw_metrics(args.hw_metrics)}")
     if args.trace_out:
         print(f"trace -> {eng.write_trace(args.trace_out)} "
               f"({len(eng.obs.tracer)} events)")

@@ -32,10 +32,25 @@ from repro.obs.export import (
     chrome_trace,
     prometheus_text,
     validate_chrome_trace,
+    validate_hw_block,
+    validate_metrics_json,
     validate_prometheus_text,
     write_chrome_trace,
     write_prometheus,
 )
+
+#: hwcost names resolve lazily (PEP 562): the CLI tools (check / regress)
+#: import this package and must stay importable without the core stack.
+_HWCOST_NAMES = {"HardwareCostModel", "LayerGeom", "bitslice_design",
+                 "da_design", "draft_price"}
+
+
+def __getattr__(name):
+    if name in _HWCOST_NAMES:
+        from repro.obs import hwcost
+
+        return getattr(hwcost, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -57,7 +72,9 @@ __all__ = [
     "COUNT_BUCKETS",
     "Counter",
     "Gauge",
+    "HardwareCostModel",
     "Histogram",
+    "LayerGeom",
     "METRICS_SCHEMA_VERSION",
     "MetricsRegistry",
     "Observability",
@@ -65,13 +82,18 @@ __all__ = [
     "TIME_BUCKETS",
     "TraceEvent",
     "TraceRecorder",
+    "bitslice_design",
     "chrome_trace",
+    "da_design",
     "default_registry",
     "default_tracer",
     "device_span",
+    "draft_price",
     "prometheus_text",
     "request_track",
     "validate_chrome_trace",
+    "validate_hw_block",
+    "validate_metrics_json",
     "validate_prometheus_text",
     "write_chrome_trace",
     "write_prometheus",

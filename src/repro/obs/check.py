@@ -4,8 +4,12 @@ Usage (what CI runs after the traced serve smoke)::
 
     python -m repro.obs.check trace.json metrics.prom
 
-Each path is validated by extension: ``*.json`` as a Chrome trace_event
-file, anything else as Prometheus text exposition.  Prints one line per
+``*.json`` files route by content: a ``traceEvents`` container validates as
+a Chrome trace_event file (including the schema-v2 ``est_pj``/``est_ns``
+energy annotations on spans), a ``metrics_schema_version``-stamped object
+as a metrics/BENCH payload (hardware-cost ``hw`` blocks checked wherever
+they appear; version-1 files predate them and still validate).  Anything
+else validates as Prometheus text exposition.  Prints one line per
 artifact; exits nonzero on the first invalid one.
 """
 from __future__ import annotations
@@ -13,7 +17,11 @@ from __future__ import annotations
 import json
 import sys
 
-from repro.obs.export import validate_chrome_trace, validate_prometheus_text
+from repro.obs.export import (
+    validate_chrome_trace,
+    validate_metrics_json,
+    validate_prometheus_text,
+)
 
 
 def check_file(path: str) -> list:
@@ -23,7 +31,13 @@ def check_file(path: str) -> list:
                 obj = json.load(f)
             except json.JSONDecodeError as e:
                 return [f"invalid JSON: {e}"]
-        return validate_chrome_trace(obj)
+        if isinstance(obj, dict) and "traceEvents" in obj:
+            return validate_chrome_trace(obj)
+        if isinstance(obj, dict) and "metrics_schema_version" in obj:
+            return validate_metrics_json(obj)
+        return ["unrecognized JSON artifact: neither a Chrome trace "
+                "('traceEvents') nor a stamped metrics payload "
+                "('metrics_schema_version')"]
     with open(path) as f:
         return validate_prometheus_text(f.read())
 

@@ -23,6 +23,7 @@ a traced serve emits.
 from __future__ import annotations
 
 import json
+import math
 import os
 import re
 from typing import Any, Dict, List, Optional
@@ -132,6 +133,16 @@ def validate_chrome_trace(obj: Any) -> List[str]:
             errs.append(f"event {i}: missing 'ts'")
         if ph == "X" and "dur" not in ev:
             errs.append(f"event {i}: complete event missing 'dur'")
+        args = ev.get("args")
+        if isinstance(args, dict):
+            # energy-annotated spans (schema v2): when present, the hardware
+            # estimates must be finite non-negative numbers.  Absent is fine
+            # (older traces, spans outside the priced phases) — back-compat.
+            for key in ("est_pj", "est_ns"):
+                v = args.get(key)
+                if v is not None and not _is_cost(v):
+                    errs.append(f"event {i}: args[{key!r}]={v!r} is not a "
+                                "finite non-negative number")
         key = (ev.get("pid"), ev.get("tid"))
         if ph == "B":
             depth[key] = depth.get(key, 0) + 1
@@ -276,3 +287,102 @@ def snapshot_with_schema(registry: Optional[MetricsRegistry]) -> Dict[str, Any]:
     if registry is None:
         return {"metrics_schema_version": METRICS_SCHEMA_VERSION}
     return registry.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# hardware-cost metrics validation (schema v2)
+# ---------------------------------------------------------------------------
+
+
+def _is_cost(v: Any) -> bool:
+    """A finite, non-negative number (bool excluded — JSON true is not 1)."""
+    return (isinstance(v, (int, float)) and not isinstance(v, bool)
+            and math.isfinite(v) and v >= 0)
+
+
+def validate_hw_block(hw: Any, where: str = "hw") -> List[str]:
+    """Structural checks on a ``metrics()["hw"]`` block (empty = valid).
+
+    Required: the static per-token prices (``pj_per_token``/``ns_per_token``),
+    the component breakdown, the bit-slicing counterfactual, and the
+    design-point ratios.  Workload keys (``tokens``/``est_pj``/``est_ns``/
+    ``live``) are optional — a freshly-built engine has not served yet — but
+    must be well-formed when present.  Pure dict checks: no hwcost import,
+    so the CLI stays dependency-light."""
+    errs: List[str] = []
+    if not isinstance(hw, dict):
+        return [f"{where}: must be an object, got {type(hw).__name__}"]
+    for key in ("pj_per_token", "ns_per_token"):
+        if not _is_cost(hw.get(key)):
+            errs.append(f"{where}.{key}: missing or not a finite "
+                        "non-negative number")
+    comp = hw.get("components")
+    if not isinstance(comp, dict):
+        errs.append(f"{where}.components: missing or not an object")
+    else:
+        for key in ("sense_pj", "array_overhead_pj", "adder_pj"):
+            if not _is_cost(comp.get(key)):
+                errs.append(f"{where}.components.{key}: missing or invalid")
+    bs = hw.get("bitslice")
+    if not isinstance(bs, dict):
+        errs.append(f"{where}.bitslice: missing or not an object")
+    else:
+        for key in ("pj_per_token", "ns_per_token"):
+            if not _is_cost(bs.get(key)):
+                errs.append(f"{where}.bitslice.{key}: missing or invalid")
+    ratios = hw.get("ratios")
+    if not isinstance(ratios, dict):
+        errs.append(f"{where}.ratios: missing or not an object")
+    else:
+        for key in ("energy", "latency"):
+            if not _is_cost(ratios.get(key)):
+                errs.append(f"{where}.ratios.{key}: missing or invalid")
+    for key in ("tokens", "est_pj", "est_ns", "live"):
+        sub = hw.get(key)
+        if sub is None:
+            continue
+        if not isinstance(sub, dict):
+            errs.append(f"{where}.{key}: not an object")
+            continue
+        for k, v in sub.items():
+            if not _is_cost(v):
+                errs.append(f"{where}.{key}.{k}: invalid value {v!r}")
+    if isinstance(hw.get("est_pj"), dict) and "total" not in hw["est_pj"]:
+        errs.append(f"{where}.est_pj: missing 'total'")
+    return errs
+
+
+def _walk_hw(obj: Any, path: str, errs: List[str]) -> None:
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{path}.{k}" if path else k
+            if k == "hw":
+                if v is None:
+                    errs.append(f"{p}: null (no DA cost model — served "
+                                "float weights?)")
+                else:
+                    errs.extend(validate_hw_block(v, where=p))
+            else:
+                _walk_hw(v, p, errs)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _walk_hw(v, f"{path}[{i}]", errs)
+
+
+def validate_metrics_json(obj: Any) -> List[str]:
+    """Checks on a schema-stamped metrics JSON (``write_hw_metrics`` output,
+    BENCH_*.json payloads).  Version 1 files predate the hardware block and
+    validate with no ``hw`` requirements (back-compat); version ≥ 2 files
+    must carry well-formed ``hw`` blocks wherever the key appears."""
+    if not isinstance(obj, dict):
+        return ["top level must be an object"]
+    version = obj.get("metrics_schema_version")
+    if not isinstance(version, int):
+        return ["missing integer 'metrics_schema_version'"]
+    if version > METRICS_SCHEMA_VERSION:
+        return [f"schema version {version} is newer than this build "
+                f"understands ({METRICS_SCHEMA_VERSION})"]
+    errs: List[str] = []
+    if version >= 2:
+        _walk_hw(obj, "", errs)
+    return errs

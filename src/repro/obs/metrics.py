@@ -28,7 +28,9 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 #: Version stamp for every exported snapshot / BENCH_*.json so downstream
 #: consumers (dashboards, trend scripts) can detect schema drift.
-METRICS_SCHEMA_VERSION = 1
+#: v2: hardware-cost block (``metrics()["hw"]``, ``hw_*`` series,
+#: ``req_hw_pj`` histogram, ``est_pj``/``est_ns`` trace-span args).
+METRICS_SCHEMA_VERSION = 2
 
 #: Geometric latency buckets: 10 us .. ~100 s, factor ~2.15 (21 buckets).
 #: Wide enough for TTFT on a cold compile and tight enough that decode-loop
@@ -39,6 +41,12 @@ TIME_BUCKETS: Tuple[float, ...] = tuple(
 
 #: Generic magnitude buckets (token counts, page counts): 1 .. ~1e6, pow2.
 COUNT_BUCKETS: Tuple[float, ...] = tuple(float(2 ** i) for i in range(21))
+
+#: Per-request estimated energy (pJ): decades from 100 pJ to ~10 mJ — a
+#: single CONV1 VMM is ~1e2 pJ, a long LM request runs to ~1e10+ pJ.
+ENERGY_BUCKETS: Tuple[float, ...] = tuple(
+    10.0 ** (2 + 0.5 * i) for i in range(17)
+)
 
 LabelKey = Tuple[Tuple[str, str], ...]
 

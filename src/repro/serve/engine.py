@@ -328,6 +328,7 @@ class ServeEngine:
         kv_dtypes: Optional[Dict[str, str]] = None,
         trace: bool = False,
         obs: Optional[Observability] = None,
+        hw=None,
     ):
         # paged_attn: the paged-attention read backend — "gather" (XLA
         # page-table gather), "fused" (Pallas in-kernel page walk; interpret
@@ -363,6 +364,10 @@ class ServeEngine:
         # a pre-built Observability bundle instead (overrides trace=); each
         # engine otherwise builds its own, so two engines in one process
         # never share series.
+        # hw: a repro.obs.hwcost.HardwareCostModel pricing the serving work
+        # on the paper's DA circuits.  None derives it from the artifact
+        # being frozen/loaded (or the already-frozen params); float-weight
+        # engines have no DA geometry, so attribution stays off.
         # Bake the KV precision into cfg BEFORE freezing, so the artifact's
         # model config and plan record the precision this engine serves at
         # (from_artifact then rebuilds a matching pool without being told).
@@ -380,6 +385,14 @@ class ServeEngine:
                 kv_dtype_overrides=kv_dtypes,
             )
             params = self.artifact.params
+        if hw is None:
+            if self.artifact is not None:
+                hw = self.artifact.hwcost
+            elif _is_frozen(params):
+                from repro.obs.hwcost import HardwareCostModel
+
+                hw = HardwareCostModel.from_frozen(params)
+        self.hw = hw if hw else None
         # the engine always uses the sliced prefill head (strictly better)
         cfg = dataclasses.replace(cfg, prefill_last_only=True)
         self.cfg = cfg
@@ -403,7 +416,7 @@ class ServeEngine:
                 prefill_chunk=prefill_chunk, prefill_lanes=prefill_lanes,
                 token_budget=token_budget, admission=admission, spec=spec,
                 prefix_cache=prefix_cache, paged_attn=paged_attn,
-                kv_dtypes=kv_dtypes, obs=self.obs,
+                kv_dtypes=kv_dtypes, obs=self.obs, hw=self.hw,
             )
         elif runtime == "slots":
             quantized = cfg.kv_dtype != "fp16" or any(
@@ -485,6 +498,7 @@ class ServeEngine:
             )
         if not explicit and plan_kv:
             runtime_kw = dict(runtime_kw, kv_dtypes=plan_kv)
+        runtime_kw.setdefault("hw", art.hwcost)  # the manifest's cost table
         eng = cls(art.model_cfg, art.params, batch_size, max_len,
                   greedy=greedy, **runtime_kw)
         eng.artifact = art
@@ -545,6 +559,21 @@ class ServeEngine:
     def write_metrics(self, path: str) -> str:
         """Dump the registry in Prometheus text exposition format."""
         return write_prometheus(path, self.obs.registry)
+
+    def write_hw_metrics(self, path: str) -> str:
+        """Dump ``metrics()["hw"]`` — the DA hardware-cost block — as
+        schema-stamped JSON (what ``repro.obs.check`` validates and the
+        ``--hw-metrics`` launcher knob writes).  ``hw`` is null when the
+        engine has no cost model (float weights)."""
+        import json
+
+        from repro.obs.metrics import METRICS_SCHEMA_VERSION
+
+        payload = {"metrics_schema_version": METRICS_SCHEMA_VERSION,
+                   "hw": self.metrics().get("hw")}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        return path
 
 
 def _is_frozen(params: Any) -> bool:

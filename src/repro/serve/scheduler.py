@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +56,8 @@ from repro.launch.sharding import shard_paged_caches
 from repro.models.config import ModelConfig
 from repro.models.model import forward
 from repro.obs import Observability
+from repro.obs.hwcost import HardwareCostModel, draft_price
+from repro.obs.metrics import ENERGY_BUCKETS
 from repro.obs.trace import SCHED_TRACK, device_span, request_track
 from repro.serve.kvcache import (
     GARBAGE_PAGE,
@@ -102,6 +104,11 @@ class Request:
     first_token_t: Optional[float] = None
     finish_t: float = 0.0
     token_times: Optional[List[float]] = None
+    # estimated DA-hardware cost of this request's executed work (pJ /
+    # model-ns), accumulated by the scheduler when a HardwareCostModel is
+    # attached; stays 0.0 otherwise
+    hw_pj: float = 0.0
+    hw_ns: float = 0.0
 
     def __post_init__(self):
         if self.generated is None:
@@ -238,6 +245,7 @@ class PagedScheduler:
         kv_dtype: Optional[str] = None,
         kv_dtypes: Optional[Dict[str, str]] = None,
         obs: Optional[Observability] = None,
+        hw: Optional[HardwareCostModel] = None,
     ):
         if admission not in ("reserve", "optimistic"):
             raise ValueError(f"unknown admission policy {admission!r}")
@@ -393,6 +401,40 @@ class PagedScheduler:
                 return vbase(*a)
 
             self._verify_step = jax.jit(counted_verify)
+
+        # -- hardware cost attribution (repro.obs.hwcost) ---------------------
+        # Per-token-pass prices by phase, fixed at init: prefill / decode /
+        # verify run the full-precision model; draft and draft-side ingest
+        # run at the provider's price (truncated bit-planes → exactly
+        # proportionally fewer read cycles; own-artifact drafts get their
+        # own cost table; layer-skip scales by cost_ratio).
+        self.hw = hw if hw else None  # empty cost table ⇒ no attribution
+        self._hw_prices: Dict[str, Tuple[float, float]] = {}
+        self._hw_bs: Dict[str, Tuple[float, float]] = {}
+        self._hw_draft: Optional[Dict[str, Any]] = None
+        if self.hw is not None:
+            full = (self.hw.pj_per_token(), self.hw.ns_per_token())
+            bs_full = (self.hw.bitslice_pj_per_token(),
+                       self.hw.bitslice_ns_per_token())
+            for ph in ("prefill", "decode", "verify"):
+                self._hw_prices[ph] = full
+                self._hw_bs[ph] = bs_full
+            if self._provider is not None:
+                dp = draft_price(self.hw, self._provider, self.params)
+                self._hw_draft = dp
+                for ph in ("draft", "draft_ingest"):
+                    self._hw_prices[ph] = (dp["pj"], dp["ns"])
+                    self._hw_bs[ph] = (dp["bs_pj"], dp["bs_ns"])
+            self._c_hw_tokens = reg.counter(
+                "hw_tokens", "token-passes priced by the DA hardware model")
+            self._c_hw_pj = reg.counter(
+                "hw_est_pj", "estimated DA energy of executed work (pJ)")
+            self._c_hw_ns = reg.counter(
+                "hw_est_ns",
+                "estimated serialized DA latency of executed work (ns)")
+            self._h_req_pj = reg.histogram(
+                "req_hw_pj", "per-request estimated DA energy (pJ)",
+                buckets=ENERGY_BUCKETS)
 
     # -- registry-backed counter views ---------------------------------------
     # The pre-registry attribute surface (tests and external tooling read
@@ -762,6 +804,24 @@ class PagedScheduler:
             )
         return np.asarray(logits)
 
+    def _hw_charge(self, req: Request, phase: str, n: int) -> float:
+        """Price ``n`` executed token-passes of ``phase`` work on the DA
+        hardware model: registry counters (labeled by phase) plus the
+        request's own running total.  Returns the pJ charged (0.0 with no
+        cost model attached) — callers may stamp it on trace spans.  Purely
+        host-side float math; never touches device state, so accounting is
+        identical with tracing on or off."""
+        if self.hw is None or n <= 0:
+            return 0.0
+        pj_tok, ns_tok = self._hw_prices[phase]
+        pj, ns = pj_tok * n, ns_tok * n
+        self._c_hw_tokens.inc(n, phase=phase)
+        self._c_hw_pj.inc(pj, phase=phase)
+        self._c_hw_ns.inc(ns, phase=phase)
+        req.hw_pj += pj
+        req.hw_ns += ns
+        return pj
+
     def _prefill_phase(self, prefill, decode_count: int) -> set:
         """Up to ``prefill_lanes`` ingesting lanes advance by one chunk each
         in a compact [prefill_lanes, T_bucket] sub-batch — the page pool is
@@ -794,12 +854,16 @@ class PagedScheduler:
         now = time.perf_counter()
         if self._tr.enabled:
             for r, i, l in rows:
+                extra = ({"est_pj": self._hw_prices["prefill"][0] * plan[i]}
+                         if self.hw is not None else {})
                 self._tr.complete("prefill_chunk", request_track(l.req.uid),
-                                  t0, now - t0, tokens=plan[i], pos=l.pos)
+                                  t0, now - t0, tokens=plan[i], pos=l.pos,
+                                  **extra)
             self._tr.complete("prefill", SCHED_TRACK, t0, now - t0,
                               lanes=len(rows), t_step=t_step)
         for r, i, l in rows:
             l.pos += plan[i]
+            self._hw_charge(l.req, "prefill", plan[i])
             self._c_ctx.inc(plan[i])
             self._maybe_cache_prefix(l)  # before _sample can free the pages
             if l.remaining == 0:  # chunk covered the last unseen token
@@ -835,10 +899,13 @@ class PagedScheduler:
         logits = self._run_batch(rows, plan, width, 1)
         now = time.perf_counter()
         if self._tr.enabled:
+            extra = ({"est_pj": self._hw_prices["decode"][0] * len(live)}
+                     if self.hw is not None else {})
             self._tr.complete("decode", SCHED_TRACK, t0, now - t0,
-                              lanes=len(live), width=width)
+                              lanes=len(live), width=width, **extra)
         for r, i, l in rows:
             l.pos += 1
+            self._hw_charge(l.req, "decode", 1)
             self._c_ctx.inc()
             self._maybe_cache_prefix(l)  # before _sample can free the pages
             self._sample(i, l, logits[r], now)
@@ -961,6 +1028,7 @@ class PagedScheduler:
                              width_bucket(len(pend), self.b), t)
             for i, l in pend:
                 l.draft_pos += len(toks[i])
+                self._hw_charge(l.req, "draft_ingest", len(toks[i]))
 
     def _run_verify(self, rows, toks, poss, width: int,
                     t_step: int) -> np.ndarray:
@@ -1002,6 +1070,11 @@ class PagedScheduler:
             poss[i] = list(range(s, l.pos + 1))
         t1 = min(pow2_bucket(max(len(t) for t in toks.values())),
                  max(self.prefill_chunk, 1))
+        # per-lane draft work this round: the fused call feeds len(toks[i])
+        # tokens (catch-up + x_t, yielding the first proposal) then scans
+        # gamma-1 more single-token steps — capture before toks is rebuilt
+        # for verify below
+        feed = {i: len(toks[i]) for _, i, _ in rows}
         dmat = self._run_draft(rows, toks, poss, width, t1)
         for r, i, _ in rows:
             drafts[i] = [int(t) for t in dmat[r]]
@@ -1017,6 +1090,10 @@ class PagedScheduler:
         for r, i, l in rows:
             verify = [int(np.argmax(vlogits[r, j])) for j in range(g + 1)]
             m = greedy_accept(drafts[i], verify)
+            # charge the round's executed work BEFORE _accept_tokens: a lane
+            # finishing mid-round observes req_hw_pj with this round included
+            round_pj = (self._hw_charge(l.req, "draft", feed[i] + g - 1)
+                        + self._hw_charge(l.req, "verify", g + 1))
             emitted = self._accept_tokens(i, l, verify[:m], now)
             l.pos = start_pos[i] + emitted
             # own-cache draft KV is valid for the matched prefix only
@@ -1028,9 +1105,11 @@ class PagedScheduler:
             if m == g + 1:
                 self._c_bonus.inc()
             if self._tr.enabled:
+                extra = ({"est_pj": round_pj}
+                         if self.hw is not None else {})
                 self._tr.complete("spec_round", request_track(l.req.uid),
                                   t0, now - t0, drafted=g, accepted=m - 1,
-                                  emitted=emitted)
+                                  emitted=emitted, **extra)
             self._update_spec_state(l.req.uid, (m - 1) / g)
             if self.lanes[i] is l:  # still running: release rejected pages
                 kv_rollback(self.pool, l.pages, ckpts[i],
@@ -1069,6 +1148,8 @@ class PagedScheduler:
                 self.pool.free(lane.pages)
                 self.done[req.uid] = req
                 self.lanes[i] = None
+                if self.hw is not None:
+                    self._h_req_pj.observe(req.hw_pj)
                 if self._tr.enabled:
                     track = request_track(req.uid)
                     self._tr.instant("finish", track, ts=now,
@@ -1121,6 +1202,8 @@ class PagedScheduler:
             self.pool.free(lane.pages)
             self.done[req.uid] = req
             self.lanes[i] = None
+            if self.hw is not None:
+                self._h_req_pj.observe(req.hw_pj)
             if self._tr.enabled:
                 track = request_track(req.uid)
                 self._tr.instant("finish", track, ts=now,
@@ -1252,6 +1335,40 @@ class PagedScheduler:
         # "pool" section and the kv section's byte keys ("pool_bytes" stays
         # the measured device-array footprint, which the sharded caches can
         # pad past page_bytes * n_pages)
+        # estimated cost of the run on the paper's DA hardware: the static
+        # per-token table (summary) plus LIVE workload-weighted totals —
+        # executed token-passes per phase × per-phase prices, with the
+        # bit-slicing counterfactual priced over the SAME executed work so
+        # the live ratios answer "what did this workload save"
+        hw = None
+        if self.hw is not None:
+            hw = self.hw.summary()
+            phases = sorted(self._hw_prices)
+            tokens = {p: self._c_hw_tokens.value(phase=p) for p in phases}
+            est_pj = {p: self._c_hw_pj.value(phase=p) for p in phases}
+            est_ns = {p: self._c_hw_ns.value(phase=p) for p in phases}
+            total_pj = sum(est_pj.values())
+            total_ns = sum(est_ns.values())
+            bs_pj = sum(self._hw_bs[p][0] * tokens[p] for p in phases)
+            bs_ns = sum(self._hw_bs[p][1] * tokens[p] for p in phases)
+            out_toks = self.out_tokens
+            hw.update({
+                "tokens": tokens,
+                "est_pj": {**est_pj, "total": total_pj},
+                "est_ns": {**est_ns, "total": total_ns},
+                "pj_per_out_token": (total_pj / out_toks
+                                     if out_toks else 0.0),
+                "live": {
+                    "da_pj": total_pj,
+                    "bitslice_pj": bs_pj,
+                    "energy_ratio": bs_pj / total_pj if total_pj else 0.0,
+                    "da_ns": total_ns,
+                    "bitslice_ns": bs_ns,
+                    "latency_ratio": bs_ns / total_ns if total_ns else 0.0,
+                },
+            })
+            if self._hw_draft is not None:
+                hw["draft"] = dict(self._hw_draft)
         pool_stats = self.pool.stats()
         kv = {
             "kv_dtypes": dict(self.kv_dtypes),
@@ -1273,6 +1390,7 @@ class PagedScheduler:
             "tokens_per_s": self.out_tokens / wall if wall > 0 else 0.0,
             "pool": pool_stats,
             "kv": kv,
+            "hw": hw,
             "spec": spec,
             "prefix_cache": prefix,
         }
