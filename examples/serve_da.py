@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs.registry import ARCHS
 from repro.models.model import count_params, init_model
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.quantize import da_memory_report
+from repro.core.freeze import da_memory_report
 
 
 def build_cfg():

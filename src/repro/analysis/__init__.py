@@ -1,0 +1,33 @@
+"""Static analysis for the DA serving stack.
+
+Three layers, one CLI (``python -m repro.analysis.check``):
+
+* :mod:`repro.analysis.passes` — graph invariant passes over traced
+  serving steps (multiplier-free, no-big-gather, no-host-sync,
+  dtype-discipline).
+* :mod:`repro.analysis.races` — static page-aliasing race checker over
+  ``PagedScheduler`` batch plans (also wired into the scheduler's
+  ``analysis_debug`` mode).
+* :mod:`repro.analysis.lint` — AST lint rules encoding repo conventions
+  (platform-derived ``interpret``, shared clock, metrics registry,
+  benchmark provenance).
+
+Every layer reports through the shared :class:`repro.analysis.findings.Finding`
+record, so CI and the CLI render one unified table.
+"""
+from repro.analysis.findings import Finding, errors, render
+from repro.analysis.hlo import bytes_by_op_kind, iter_ops, ops_of_kind
+from repro.analysis.races import PageRaceError, PageWrite, TickPlan, check_plan
+
+__all__ = [
+    "Finding",
+    "PageRaceError",
+    "PageWrite",
+    "TickPlan",
+    "bytes_by_op_kind",
+    "check_plan",
+    "errors",
+    "iter_ops",
+    "ops_of_kind",
+    "render",
+]

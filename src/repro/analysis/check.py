@@ -1,0 +1,229 @@
+"""CLI entry for the static verifier: ``python -m repro.analysis.check``.
+
+Three check families, composable per invocation:
+
+* **graph passes** — load a frozen artifact (``--artifact DIR``, repeatable)
+  or freeze fresh smoke-scale models from the config zoo (``--configs
+  all`` / ``--configs name,name``), trace its decode / chunked-prefill /
+  spec-draft step functions under the gather and fused attention backends,
+  and run the pass pipeline: multiplier-free (jaxpr taint), no-big-gather,
+  no-host-sync, dtype-discipline (optimized HLO).
+* **repo lint** — the AST rules in :mod:`repro.analysis.lint` over the
+  default source tree (``--lint-only`` for just this, ``--no-lint`` to
+  skip).
+* **verdict recording** — each checked artifact's ``manifest.json`` gets
+  the summary stamped under ``"analysis"`` (``--no-record`` to skip).
+
+Exit status is 1 when any error-severity finding survives the allowlist,
+0 otherwise.  ``--json OUT`` dumps the full findings list for CI upload.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding, dump_json, errors, render
+from repro.analysis.passes import DEFAULT_ALLOWLIST, run_passes
+
+#: bumped when the verdict dict recorded into artifact manifests changes
+VERDICT_SCHEMA = 1
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="static verifier: multiplier-free serving graphs, "
+                    "page-aliasing plans, repo lint",
+    )
+    p.add_argument("--artifact", action="append", default=[],
+                   metavar="DIR", help="frozen DA artifact to check "
+                   "(repeatable)")
+    p.add_argument("--configs", default=None, metavar="all|name,...",
+                   help="freeze smoke-scale models from the config zoo and "
+                        "check their serving graphs")
+    p.add_argument("--mode", default="auto",
+                   help="freeze mode for --configs models (default: auto)")
+    p.add_argument("--spec-gamma", type=int, default=2,
+                   help="trace the fused speculative draft loop with this "
+                        "gamma (0 disables; default 2)")
+    p.add_argument("--no-hlo", action="store_true",
+                   help="skip compiled-HLO passes (jaxpr taint only)")
+    p.add_argument("--allow", action="append", default=[], metavar="SUBSTR",
+                   help="extra allowlist entry (matched against a finding's "
+                        "where/op; repeatable)")
+    p.add_argument("--no-default-allow", action="store_true",
+                   help="drop the built-in allowlist "
+                        f"{list(DEFAULT_ALLOWLIST)}")
+    p.add_argument("--lint-only", action="store_true",
+                   help="run only the AST lint rules")
+    p.add_argument("--no-lint", action="store_true",
+                   help="skip the AST lint rules")
+    p.add_argument("--no-record", action="store_true",
+                   help="do not stamp the verdict into artifact manifests")
+    p.add_argument("--json", default=None, metavar="OUT",
+                   help="write the findings list as JSON")
+    return p
+
+
+def _allowlist(args: argparse.Namespace) -> Tuple[str, ...]:
+    base = () if args.no_default_allow else DEFAULT_ALLOWLIST
+    return tuple(base) + tuple(args.allow)
+
+
+def check_artifact(
+    directory: str,
+    *,
+    spec_gamma: int = 2,
+    compile_hlo: bool = True,
+    allow: Sequence[str] = DEFAULT_ALLOWLIST,
+) -> Tuple[List[Finding], List[str]]:
+    """Graph-pass findings for one on-disk artifact (+ names of the steps
+    actually traced).  An artifact without a model config cannot be traced
+    — that is itself an error finding, not a silent skip."""
+    from repro.analysis.graph import supports_paged_tracing, trace_serving_steps
+    from repro.core.freeze import load_artifact
+
+    art = load_artifact(directory)
+    if art.model_cfg is None:
+        return [Finding(
+            pass_name="graph/trace", severity="error",
+            op="artifact has no model_cfg",
+            hint="re-freeze with model_cfg= so the serving graph can be "
+                 "rebuilt and verified",
+            where=directory,
+        )], []
+    if not supports_paged_tracing(art.model_cfg):
+        return [Finding(
+            pass_name="graph/trace", severity="note",
+            op=f"config {art.model_cfg.name} is outside paged-tracer "
+               "coverage",
+            hint="non-attention mixers serve through the slot runtime "
+                 "(ROADMAP open item); embedding-input modalities have no "
+                 "token step to trace",
+            where=directory,
+        )], []
+    steps = trace_serving_steps(
+        art.params, art.model_cfg, spec_gamma=spec_gamma,
+        compile_hlo=compile_hlo,
+    )
+    return run_passes(steps, allow=allow), [s.name for s in steps]
+
+
+def check_config(
+    name: str,
+    *,
+    mode: str = "auto",
+    spec_gamma: int = 2,
+    compile_hlo: bool = True,
+    allow: Sequence[str] = DEFAULT_ALLOWLIST,
+) -> Tuple[List[Finding], List[str]]:
+    """Freeze one zoo config at smoke scale and run the graph passes."""
+    import jax
+
+    from repro.analysis.graph import supports_paged_tracing, trace_serving_steps
+    from repro.configs.registry import get, reduce_for_smoke
+    from repro.core.da import DAConfig
+    from repro.core.freeze import freeze_model
+    from repro.models.model import init_model
+
+    cfg = reduce_for_smoke(get(name))
+    if not supports_paged_tracing(cfg):
+        return [Finding(
+            pass_name="graph/trace", severity="note",
+            op=f"config {name} is outside paged-tracer coverage",
+            hint="non-attention mixers serve through the slot runtime "
+                 "(ROADMAP open item); embedding-input modalities have no "
+                 "token step to trace",
+            where=f"configs:{name}",
+        )], []
+    params = init_model(jax.random.key(0), cfg)
+    art = freeze_model(params, DAConfig(x_signed=True), mode=mode,
+                       model_cfg=cfg)
+    steps = trace_serving_steps(
+        art.params, cfg, spec_gamma=spec_gamma, compile_hlo=compile_hlo,
+    )
+    return run_passes(steps, allow=allow), [s.name for s in steps]
+
+
+def verdict_of(findings: Sequence[Finding],
+               checked: Sequence[str]) -> Dict[str, Any]:
+    """The summary dict recorded into an artifact manifest."""
+    by_pass: Dict[str, int] = {}
+    for f in findings:
+        by_pass[f.pass_name] = by_pass.get(f.pass_name, 0) + 1
+    n_err = len(errors(findings))
+    return {
+        "schema": VERDICT_SCHEMA,
+        "ok": n_err == 0,
+        "errors": n_err,
+        "warnings": sum(1 for f in findings if f.severity == "warning"),
+        "notes": sum(1 for f in findings if f.severity == "note"),
+        "findings_by_pass": by_pass,
+        "steps_checked": list(checked),
+        "checked_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+    allow = _allowlist(args)
+    findings: List[Finding] = []
+
+    if not args.lint_only:
+        for directory in args.artifact:
+            fs, checked = check_artifact(
+                directory, spec_gamma=args.spec_gamma,
+                compile_hlo=not args.no_hlo, allow=allow,
+            )
+            findings += fs
+            print(f"[graph] {directory}: {len(checked)} step(s) traced, "
+                  f"{len(fs)} finding(s)")
+            if not args.no_record and checked:
+                from repro.core.freeze import record_analysis
+
+                record_analysis(directory, verdict_of(fs, checked))
+        if args.configs:
+            from repro.configs.registry import ARCHS
+
+            names = (sorted(ARCHS) if args.configs == "all"
+                     else [n.strip() for n in args.configs.split(",")
+                           if n.strip()])
+            for name in names:
+                try:
+                    fs, checked = check_config(
+                        name, mode=args.mode, spec_gamma=args.spec_gamma,
+                        compile_hlo=not args.no_hlo, allow=allow,
+                    )
+                except Exception as e:  # a config that cannot even trace
+                    fs, checked = [Finding(
+                        pass_name="graph/trace", severity="error",
+                        op=f"{type(e).__name__}: {e}",
+                        hint="freezing or tracing this config crashed — the "
+                             "serving graph cannot be verified",
+                        where=f"configs:{name}",
+                    )], []
+                findings += fs
+                print(f"[graph] configs:{name}: {len(checked)} step(s) "
+                      f"traced, {len(fs)} finding(s)")
+
+    if not args.no_lint:
+        from repro.analysis.lint import lint_repo
+
+        fs = lint_repo()
+        findings += fs
+        print(f"[lint] {len(fs)} finding(s)")
+
+    if findings:
+        print(render(findings))
+    if args.json:
+        dump_json(findings, args.json)
+        print(f"findings written to {args.json}")
+    n_err = len(errors(findings))
+    print(f"analysis: {len(findings)} finding(s), {n_err} error(s)")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,195 @@
+"""Trace frozen serving step functions to jaxpr + optimized HLO.
+
+The passes need two views of every step the scheduler launches: the jaxpr
+(for the taint-based ``multiplier-free`` pass — it keeps the Pallas kernel
+bodies and weight-leaf structure the HLO fuses away) and the compiled HLO
+text (for the structural byte/op passes).  :func:`trace_serving_steps`
+builds both for the decode, chunked-prefill and speculative-draft step
+functions, under the gather *and* fused attention backends, with the same
+synthetic paged-cache arguments the scheduler warms up with.
+
+Taint seeding mirrors the freeze planner's notion of "weight leaf"
+(``core.freeze.DA_LEAF_NAMES`` / ``SKIP_CONTEXT``): integer ``PackedWeights``
+children (codes, LUTs) seed ``INT_EXACT``; float weight matrices (the
+unfrozen baseline) seed ``FLOAT``; dequant scales (``w_scale``), router/
+embedding/conv leaves and everything non-weight seed nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.passes import Flavor, Taint, UNTAINTED
+from repro.core.engine import path_entry_name
+from repro.core.freeze import DA_LEAF_NAMES, SKIP_CONTEXT
+
+
+@dataclasses.dataclass
+class TracedStep:
+    """One serving step function, traced for the pass pipeline.
+
+    view_bytes: size of the re-materialized ``[B, W·ps, kv, hd]`` page-
+    table KV view at the narrowest pool dtype — the ``no-big-gather``
+    threshold.  fused: this lowering claims the in-kernel page walk (the
+    gather pass only gates fused lowerings).
+    """
+
+    name: str
+    closed_jaxpr: Any
+    hlo: str
+    arg_taints: List[Taint]
+    view_bytes: int
+    fused: bool
+
+
+def arg_taints(args: Any) -> List[Taint]:
+    """Seed taints for one flattened argument tree (the same flattening
+    order ``jax.make_jaxpr`` binds invars in)."""
+    flat = jax.tree_util.tree_flatten_with_path(args)[0]
+    out: List[Taint] = []
+    for path, leaf in flat:
+        names = [path_entry_name(p) for p in path]
+        out.append(_leaf_taint(names, leaf))
+    return out
+
+
+def _leaf_taint(names: Sequence[str], leaf: Any) -> Taint:
+    if not names or any(n in SKIP_CONTEXT for n in names):
+        return UNTAINTED
+    last = names[-1]
+    if last == "w_scale":
+        # dequant metadata: scaling an accumulated inner product is the
+        # paper-sanctioned float epilogue, not a weight multiply
+        return UNTAINTED
+    if last in ("wq", "luts"):
+        return Taint(Flavor.INT_EXACT, False)
+    if last in DA_LEAF_NAMES:
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is not None and np.issubdtype(dtype, np.integer):
+            return Taint(Flavor.INT_EXACT, False)
+        return Taint(Flavor.FLOAT, False)
+    return UNTAINTED
+
+
+def _min_pool_itemsize(caches: Any) -> int:
+    """Narrowest dtype across the paged KV pools: a gather of the whole
+    page-table view is a violation even at int8/int4 code width."""
+    sizes = [leaf.dtype.itemsize for leaf in jax.tree_util.tree_leaves(caches)
+             if hasattr(leaf, "dtype")]
+    return min(sizes) if sizes else 4
+
+
+def page_view_bytes(cfg: Any, batch_size: int, table_width: int,
+                    page_size: int, itemsize: int) -> int:
+    """Bytes of one re-materialized ``[B, W·ps, kv, hd]`` KV view."""
+    return (batch_size * table_width * page_size * cfg.n_kv_heads
+            * cfg.head_dim_ * itemsize)
+
+
+def _trace_one(name: str, fn: Any, args: Tuple[Any, ...], view_bytes: int,
+               fused: bool, compile_hlo: bool) -> TracedStep:
+    closed = jax.make_jaxpr(fn)(*args)
+    hlo = ""
+    if compile_hlo:
+        hlo = jax.jit(fn).lower(*args).compile().as_text()
+    return TracedStep(
+        name=name, closed_jaxpr=closed, hlo=hlo,
+        arg_taints=arg_taints(args), view_bytes=view_bytes, fused=fused,
+    )
+
+
+def supports_paged_tracing(cfg: Any) -> bool:
+    """The paged step functions cover pure-attention *text* stacks.
+    SSM/hybrid configs still serve through the slot runtime (ROADMAP open
+    item), and embedding-input modalities (audio frames, vision patches)
+    have no token embed table for the paged token step to drive."""
+    try:
+        if getattr(cfg, "modality", "text") != "text":
+            return False
+        return all(cfg.mixer_kind(i) == "attn" for i in range(cfg.period))
+    except Exception:
+        return False
+
+
+def trace_serving_steps(
+    params: Any,
+    cfg: Any,
+    *,
+    batch_size: int = 2,
+    max_len: int = 32,
+    page_size: int = 8,
+    prefill_chunk: int = 8,
+    spec_gamma: int = 0,
+    spec_x_bits: int = 4,
+    backends: Sequence[str] = ("gather", "fused"),
+    compile_hlo: bool = True,
+) -> List[TracedStep]:
+    """Trace decode / chunked-prefill (/ spec-draft) steps for each
+    attention backend, with synthetic args shaped like a live scheduler."""
+    from repro.serve.kvcache import (
+        init_paged_caches, pages_for, table_width,
+    )
+    from repro.serve.scheduler import make_paged_step
+    from repro.spec.decode import mk_positions
+
+    if not supports_paged_tracing(cfg):
+        raise ValueError(
+            f"config {getattr(cfg, 'name', cfg)} is outside the paged "
+            "tracer's coverage (non-attention mixers, or an embedding-input "
+            "modality with no token step to trace)"
+        )
+    b, ps = batch_size, page_size
+    w = table_width(max_len, ps)
+    n_pages = 1 + b * pages_for(max_len, ps)
+    steps: List[TracedStep] = []
+    for backend in backends:
+        cfg_b = dataclasses.replace(cfg, paged_attn=backend)
+        caches = init_paged_caches(cfg_b, n_pages, ps, cfg_b.dtype())
+        view = page_view_bytes(cfg_b, b, w, ps, _min_pool_itemsize(caches))
+        step = make_paged_step(cfg_b)
+        fused = backend == "fused"
+
+        def args_for(t: int) -> Tuple[Any, ...]:
+            return (
+                params, caches,
+                jnp.zeros((b, t), jnp.int32),
+                mk_positions(cfg_b, jnp.zeros((b, t), jnp.int32)),
+                jnp.zeros((b, w), jnp.int32),
+                jnp.zeros((b,), jnp.int32),
+            )
+
+        steps.append(_trace_one(
+            f"decode[{backend}]", step, args_for(1), view, fused,
+            compile_hlo,
+        ))
+        if prefill_chunk > 1:
+            steps.append(_trace_one(
+                f"prefill[{backend}]", step, args_for(prefill_chunk), view,
+                fused, compile_hlo,
+            ))
+        if spec_gamma > 0 and fused:
+            draft = _make_draft(cfg_b, params, spec_gamma, spec_x_bits)
+            if draft is not None:
+                steps.append(_trace_one(
+                    f"spec_draft[{backend}]", draft, args_for(1), view,
+                    fused, compile_hlo,
+                ))
+    return steps
+
+
+def _make_draft(cfg: Any, params: Any, gamma: int,
+                x_bits: int) -> Optional[Any]:
+    """The fused truncated-bitplane draft loop, or None for float params
+    (no bit-planes to truncate — nothing extra to trace)."""
+    from repro.spec.decode import make_fused_draft
+    from repro.spec.providers import TruncatedBitplaneDraft
+
+    try:
+        provider = TruncatedBitplaneDraft(cfg, params, x_bits_eff=x_bits)
+    except ValueError:
+        return None
+    return make_fused_draft(provider.make_step(), cfg, gamma)

@@ -1,0 +1,219 @@
+"""Optimized-HLO text parser: the structural view the graph passes read.
+
+Grew out of ``repro.launch.hlo_tools`` (which now re-exports from here).
+The original ``_OP_RE`` was a single line-anchored regex; it missed
+
+* multi-line op definitions (a long ``%name =`` wrapped before the result
+  type or the op kind),
+* tuple result types with *nested* tuples — ``(f32[2], (s32[], u8[]))``
+  ended the old ``\\([^)]*\\)`` group at the first ``)``,
+* layout-annotated types whose layout carries parenthesized tile
+  suffixes (``f32[8,128]{1,0:T(8,128)}``), and
+* ops on lines carrying leading region syntax (a computation opener
+  ``{`` preceding the first body op on the same line).
+
+This parser scans logical ops instead: physical lines are joined until an
+op head (``name = <type> <kind>(``) parses, with balanced-delimiter scans
+for tuple types and layouts.  Everything downstream (byte accounting per
+op kind, the no-big-gather pass, collective tallies) reads
+:func:`iter_ops`.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
+
+_DTYPE_BYTES: Dict[str, int] = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEAD_RE = re.compile(r"^\s*[{]?\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_KIND_RE = re.compile(r"\s*([\w\-]+)\s*\(")
+_TOKEN_TYPE_RE = re.compile(r"\w+\[[\d,]*\]")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+#: Op kinds that are bookkeeping, not data movement or compute.
+_BOOKKEEPING = ("tuple", "parameter", "constant", "get-tuple-element")
+
+
+class HloOp(NamedTuple):
+    """One parsed HLO op: name, kind, result type text, source line."""
+
+    name: str
+    kind: str
+    type_str: str
+    line_no: int
+    text: str
+
+    @property
+    def result_bytes(self) -> int:
+        return shape_bytes(self.type_str)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of every array shape named in ``shape_str`` (tuples sum
+    their elements; unknown dtypes contribute nothing)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dtypes(shape_str: str) -> set:
+    """The set of array dtypes named in a result-type string."""
+    return {d for d, _ in _SHAPE_RE.findall(shape_str)}
+
+
+def _balanced_end(text: str, opener: str, closer: str) -> Optional[int]:
+    """Index of the delimiter closing ``text[0]``, counting nesting of both
+    parens and braces (layouts nest parens inside braces and vice versa)."""
+    depth = 0
+    for i, ch in enumerate(text):
+        if ch in "({":
+            depth += 1
+        elif ch in ")}":
+            depth -= 1
+            if depth == 0:
+                return i if ch == closer else None
+    return None
+
+
+def _parse_op(text: str, line_no: int) -> Optional[HloOp]:
+    """Parse one logical op line; None when ``text`` is not an op."""
+    m = _HEAD_RE.match(text)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = text[m.end():].lstrip()
+    if rest.startswith("("):  # tuple result type (possibly nested)
+        end = _balanced_end(rest, "(", ")")
+        if end is None:
+            return None
+        type_str, rest = rest[: end + 1], rest[end + 1:]
+    else:  # dtype[dims] with optional layout {..} (tiles nest parens)
+        tm = _TOKEN_TYPE_RE.match(rest)
+        if not tm:
+            return None
+        j = tm.end()
+        if j < len(rest) and rest[j] == "{":
+            end = _balanced_end(rest[j:], "{", "}")
+            if end is None:
+                return None
+            j += end + 1
+        type_str, rest = rest[:j], rest[j:]
+    km = _KIND_RE.match(rest)
+    if not km:
+        return None
+    return HloOp(name=name, kind=km.group(1), type_str=type_str,
+                 line_no=line_no, text=text.strip())
+
+
+def _starts_op(line: str) -> bool:
+    """A physical line opens a new logical op iff its head parses as
+    ``name =`` followed by something that can start a result type.  This
+    rejects wrapped attribute lines (``metadata={...}``,
+    ``backend_config="..."``) whose ``key=`` would fool a bare regex."""
+    m = _HEAD_RE.match(line)
+    if not m:
+        return False
+    rest = line[m.end():].lstrip()
+    return (not rest or rest.startswith("(")
+            or _TOKEN_TYPE_RE.match(rest) is not None)
+
+
+def iter_ops(hlo_text: str) -> Iterator[HloOp]:
+    """Every op in the module, fusion/region bodies included."""
+    buf: List[str] = []
+    buf_line = 0
+    for i, line in enumerate(hlo_text.splitlines(), start=1):
+        if _starts_op(line):
+            if buf:
+                op = _parse_op(" ".join(buf), buf_line)
+                if op is not None:
+                    yield op
+            buf, buf_line = [line], i
+        elif buf:
+            joined = " ".join(buf)
+            if _parse_op(joined, buf_line) is not None:
+                # head already complete; trailing operand/attribute lines
+                # of a wrapped op carry nothing the parser reads
+                continue
+            buf.append(line)
+    if buf:
+        op = _parse_op(" ".join(buf), buf_line)
+        if op is not None:
+            yield op
+
+
+def op_kinds(hlo_text: str) -> Dict[str, int]:
+    """Op count per kind — the census view the passes branch on."""
+    out: Dict[str, int] = defaultdict(int)
+    for op in iter_ops(hlo_text):
+        out[op.kind] += 1
+    return dict(out)
+
+
+def ops_of_kind(hlo_text: str, kind: str) -> List[Tuple[str, int]]:
+    """Every op of one HLO kind, fusion bodies included: (name, result
+    bytes), largest first.  E.g. ``ops_of_kind(txt, "gather")`` checks a
+    lowering for full-page-table KV gathers — the fused paged-attention
+    path must not contain one at the [B, W·ps, kv, hd] view size."""
+    out = [(op.name, op.result_bytes) for op in iter_ops(hlo_text)
+           if op.kind == kind]
+    return sorted(out, key=lambda t: -t[1])
+
+
+def bytes_by_op_kind(hlo_text: str, k: int = 20) -> List[Tuple[str, int, int]]:
+    """Result-shape bytes aggregated by HLO op kind (a proxy for which op
+    family dominates traffic): (kind, total bytes, count)."""
+    agg: Dict[str, List[int]] = defaultdict(lambda: [0, 0])
+    for op in iter_ops(hlo_text):
+        if op.kind in _BOOKKEEPING:
+            continue
+        agg[op.kind][0] += op.result_bytes
+        agg[op.kind][1] += 1
+    rows = [(kind, v[0], v[1]) for kind, v in agg.items()]
+    return sorted(rows, key=lambda t: -t[1])[:k]
+
+
+def top_ops(hlo_text: str, k: int = 20) -> List[Tuple[str, str, int]]:
+    """Largest individual op results (fusion outputs usually dominate)."""
+    out = []
+    for op in iter_ops(hlo_text):
+        if op.kind in ("tuple", "parameter", "get-tuple-element"):
+            continue
+        out.append((op.name, op.kind, op.result_bytes))
+    return sorted(out, key=lambda t: -t[2])[:k]
+
+
+def top_collectives(hlo_text: str, k: int = 15) -> List[Tuple[str, str, int]]:
+    """Largest collective ops: (name, kind, result bytes).  ``-start`` ops
+    are counted, their ``-done`` twins are not (the pair is one transfer)."""
+    out = []
+    for op in iter_ops(hlo_text):
+        for base in _COLLECTIVES:
+            if op.kind == base or op.kind == base + "-start":
+                out.append((op.name, base, op.result_bytes))
+                break
+    return sorted(out, key=lambda t: -t[2])[:k]
+
+
+def custom_call_target(op: HloOp) -> str:
+    """The ``custom_call_target="..."`` attribute of a custom-call op."""
+    m = re.search(r'custom_call_target="([^"]*)"', op.text)
+    return m.group(1) if m else ""

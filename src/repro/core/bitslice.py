@@ -45,7 +45,6 @@ def bitslice_vmm(xq: jax.Array, wq: jax.Array, cfg: BitSliceConfig) -> jax.Array
     xq: [M, K] integer codes; wq: [K, N] integer codes.
     Returns int32 [M, N] == xq @ wq when the ADC resolution suffices.
     """
-    k = xq.shape[-1]
     wcols = weight_bit_columns(wq, cfg)  # [K, N, w_bits]
     xmask = (1 << cfg.x_bits) - 1
     xu = jnp.bitwise_and(xq.astype(jnp.int32), xmask)

@@ -155,6 +155,9 @@ class DAArtifact:
     model_cfg: Any = None
     version: int = ARTIFACT_VERSION
     hwcost: Optional["HardwareCostModel"] = None
+    #: latest ``repro.analysis.check`` verdict recorded against this artifact
+    #: on disk (via :func:`record_analysis`), or None when never checked
+    analysis: Optional[Dict[str, Any]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -484,7 +487,29 @@ def load_artifact(directory: str) -> DAArtifact:
     return DAArtifact(params=params, plan=plan, da_cfg=da_cfg,
                       model_cfg=model_cfg,
                       version=manifest.get("artifact_version", 1),
-                      hwcost=hwcost)
+                      hwcost=hwcost,
+                      analysis=manifest.get("analysis"))
+
+
+def record_analysis(directory: str, verdict: Dict[str, Any]) -> None:
+    """Stamp a ``repro.analysis.check`` verdict into an artifact's manifest.
+
+    Read-modify-write of ``manifest.json`` under the ``"analysis"`` key,
+    written atomically (tmp file + fsync + rename) so a crashed checker can
+    never leave a truncated manifest.  The verdict dict is the checker's
+    summary — counts per pass, error/warning totals, the ``ok`` bit and the
+    checker's schema version — not the full findings list (that ships as a
+    separate JSON report when asked for)."""
+    path = os.path.join(directory, "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    manifest["analysis"] = verdict
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _demote_stale_modes(params: Any, stale: set) -> Any:

@@ -14,9 +14,8 @@ Two modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import numpy as np
 
 from repro.models.config import ModelConfig

@@ -27,7 +27,6 @@ import traceback
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ARCHS, LM_SHAPES, ShapeSpec, get, shapes_for
@@ -105,7 +104,7 @@ def lower_cell(
         else:
             if quant:
                 from repro.core.da import DAConfig
-                from repro.serve.quantize import freeze_model_da
+                from repro.core.freeze import freeze_model_da
 
                 params_shape = _abstract(
                     lambda: freeze_model_da(

@@ -1,72 +1,30 @@
-"""HLO-text diagnostics for the §Perf loop: where do the bytes/collectives go?"""
+"""HLO-text diagnostics for the §Perf loop: where do the bytes/collectives go?
+
+The parser moved to :mod:`repro.analysis.hlo` (hardened against multi-line
+op definitions, nested tuple types, layout tiles and region syntax — and
+unit-tested there); this module re-exports the same API so launch-side
+callers and older scripts keep working unchanged.
+"""
 from __future__ import annotations
 
-import re
-from collections import defaultdict
-from typing import List, Tuple
-
-from repro.launch.roofline import _COLLECTIVE_RE, _shape_bytes
-
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s*([\w\-]+)\("
+from repro.analysis.hlo import (  # noqa: F401
+    HloOp,
+    bytes_by_op_kind,
+    iter_ops,
+    op_kinds,
+    ops_of_kind,
+    shape_bytes,
+    top_collectives,
+    top_ops,
 )
 
-
-def top_collectives(hlo_text: str, k: int = 15) -> List[Tuple[str, str, int]]:
-    """Largest collective ops: (name, kind, result bytes)."""
-    out = []
-    for line in hlo_text.splitlines():
-        m = _COLLECTIVE_RE.match(line)
-        if not m:
-            continue
-        if "-done" in line.split("=", 1)[1].split("(")[0]:
-            continue
-        om = _OP_RE.match(line)
-        name = om.group(1) if om else "?"
-        out.append((name, m.group(2), _shape_bytes(m.group(1))))
-    return sorted(out, key=lambda t: -t[2])[:k]
-
-
-def bytes_by_op_kind(hlo_text: str, k: int = 20) -> List[Tuple[str, int, int]]:
-    """Result-shape bytes aggregated by HLO op kind (a proxy for which op
-    family dominates traffic): (kind, total bytes, count)."""
-    agg = defaultdict(lambda: [0, 0])
-    for line in hlo_text.splitlines():
-        m = _OP_RE.match(line)
-        if not m:
-            continue
-        kind = m.group(3)
-        if kind in ("tuple", "parameter", "constant", "get-tuple-element"):
-            continue
-        b = _shape_bytes(m.group(2))
-        agg[kind][0] += b
-        agg[kind][1] += 1
-    rows = [(kind, v[0], v[1]) for kind, v in agg.items()]
-    return sorted(rows, key=lambda t: -t[1])[:k]
-
-
-def ops_of_kind(hlo_text: str, kind: str) -> List[Tuple[str, int]]:
-    """Every op of one HLO kind, fusion bodies included: (name, result
-    bytes), largest first.  E.g. ``ops_of_kind(txt, "gather")`` checks a
-    lowering for full-page-table KV gathers — the fused paged-attention
-    path must not contain one at the [B, W·ps, kv, hd] view size."""
-    out = []
-    for line in hlo_text.splitlines():
-        m = _OP_RE.match(line)
-        if m and m.group(3) == kind:
-            out.append((m.group(1), _shape_bytes(m.group(2))))
-    return sorted(out, key=lambda t: -t[1])
-
-
-def top_ops(hlo_text: str, k: int = 20) -> List[Tuple[str, str, int]]:
-    """Largest individual op results (fusion outputs usually dominate)."""
-    out = []
-    for line in hlo_text.splitlines():
-        m = _OP_RE.match(line)
-        if not m:
-            continue
-        kind = m.group(3)
-        if kind in ("tuple", "parameter", "get-tuple-element"):
-            continue
-        out.append((m.group(1), kind, _shape_bytes(m.group(2))))
-    return sorted(out, key=lambda t: -t[2])[:k]
+__all__ = [
+    "HloOp",
+    "bytes_by_op_kind",
+    "iter_ops",
+    "op_kinds",
+    "ops_of_kind",
+    "shape_bytes",
+    "top_collectives",
+    "top_ops",
+]

@@ -91,12 +91,10 @@ def main():
     args = ap.parse_args()
 
     from repro.configs.registry import LM_SHAPES, get
-    from repro.launch.dryrun import lower_cell, run_cell, _cost_of
+    from repro.launch.dryrun import lower_cell, run_cell
     from repro.launch.mesh import make_production_mesh
 
     if args.diagnose:
-        import dataclasses
-
         from repro.launch.hlo_tools import bytes_by_op_kind, top_collectives
 
         cfg = get(args.arch)

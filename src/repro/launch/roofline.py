@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 # TPU v5e-class hardware constants (per chip)
 PEAK_FLOPS = 197e12      # bf16

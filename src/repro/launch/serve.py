@@ -102,7 +102,7 @@ def main():
     from repro.configs.registry import ARCHS, reduce_for_smoke
     from repro.models.model import count_params, init_model
     from repro.serve.engine import Request, ServeEngine
-    from repro.serve.quantize import da_memory_report
+    from repro.core.freeze import da_memory_report
 
     spec = None
     if args.spec:

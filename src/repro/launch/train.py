@@ -10,7 +10,6 @@ Fault tolerance: --ckpt-dir enables async checkpoints + crash resume.
 """
 import argparse
 import os
-import sys
 
 
 def _parse():

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 from typing import Any, List, Optional, Tuple
 
@@ -67,6 +68,11 @@ def compare(fresh: dict, committed: dict, keys: List[str],
         if not _is_num(f) or not _is_num(c):
             if f != c:
                 errs.append(f"{key}: non-numeric mismatch {f!r} != {c!r}")
+            continue
+        if not (math.isfinite(f) and math.isfinite(c)):
+            # NaN compares False against any band — without this, a NaN
+            # metric would sail through the gate
+            errs.append(f"{key}: non-finite value fresh={f} committed={c}")
             continue
         if c == 0:
             delta, band = abs(f), f"abs {tolerance}"

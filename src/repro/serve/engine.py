@@ -329,6 +329,7 @@ class ServeEngine:
         trace: bool = False,
         obs: Optional[Observability] = None,
         hw=None,
+        analysis_debug: bool = False,
     ):
         # paged_attn: the paged-attention read backend — "gather" (XLA
         # page-table gather), "fused" (Pallas in-kernel page walk; interpret
@@ -417,6 +418,7 @@ class ServeEngine:
                 token_budget=token_budget, admission=admission, spec=spec,
                 prefix_cache=prefix_cache, paged_attn=paged_attn,
                 kv_dtypes=kv_dtypes, obs=self.obs, hw=self.hw,
+                analysis_debug=analysis_debug,
             )
         elif runtime == "slots":
             quantized = cfg.kv_dtype != "fp16" or any(
@@ -444,6 +446,12 @@ class ServeEngine:
                     "prefix caching shares physical KV pages between "
                     "requests; the dense slot runtime has no page tables to "
                     "share — drop prefix_cache= or use runtime='paged'"
+                )
+            if analysis_debug:
+                raise ValueError(
+                    "analysis_debug validates paged-pool launch plans; the "
+                    "dense slot runtime has no pages — drop analysis_debug= "
+                    "or use runtime='paged'"
                 )
             self._rt = _SlotRuntime(cfg, params, batch_size, max_len, greedy,
                                     obs=self.obs)

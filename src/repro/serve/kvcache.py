@@ -26,7 +26,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import Counter, deque
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import (
+    Dict, FrozenSet, Iterator, List, Optional, Sequence, Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -228,6 +230,10 @@ class PagePool:
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
+
+    def free_page_ids(self) -> FrozenSet[int]:
+        """Snapshot of the free list as a set (race-checker ledger view)."""
+        return frozenset(self._free)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """n physical pages (one reference each), or None (backpressure) if

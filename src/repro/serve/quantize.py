@@ -9,10 +9,22 @@ cache-less fallback.  New code should use :func:`repro.core.freeze.freeze_model`
 directly — it returns the full :class:`~repro.core.freeze.DAArtifact`
 (plan included) which :func:`repro.core.freeze.save_artifact` persists for
 serve-from-disk boots.
+
+Importing this module emits a :class:`DeprecationWarning`; every in-repo
+call site now imports from :mod:`repro.core.freeze`.
 """
 from __future__ import annotations
 
-from repro.core.freeze import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.serve.quantize is a compat shim; import from repro.core.freeze "
+    "instead (the shim will be removed once external callers migrate)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from repro.core.freeze import (  # noqa: E402,F401
     DA_LEAF_NAMES,
     SKIP_CONTEXT,
     DAArtifact,

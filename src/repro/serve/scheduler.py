@@ -246,6 +246,7 @@ class PagedScheduler:
         kv_dtypes: Optional[Dict[str, str]] = None,
         obs: Optional[Observability] = None,
         hw: Optional[HardwareCostModel] = None,
+        analysis_debug: bool = False,
     ):
         if admission not in ("reserve", "optimistic"):
             raise ValueError(f"unknown admission policy {admission!r}")
@@ -299,6 +300,14 @@ class PagedScheduler:
         # prefixes; hits skip prefill for cached pages and share them by
         # refcount (COW guards the last partial page)
         self.prefix = PrefixCache(page_size) if prefix_cache else None
+        # analysis_debug: every launch's (page, offset) write plan goes
+        # through repro.analysis.races.check_plan BEFORE the device call;
+        # a violated aliasing invariant raises PageRaceError instead of
+        # silently corrupting KV.  plans_checked is a plain attribute, not a
+        # registry counter — a debug-only metric would churn the exported
+        # schema the obs regression validators pin.
+        self.analysis_debug = bool(analysis_debug)
+        self.plans_checked = 0
         # counters — registry-homed so metrics(), the Prometheus exporter,
         # and BENCH_*.json all read one source; the former plain attributes
         # (self.steps, self.out_tokens, ...) survive as read-only properties
@@ -781,11 +790,44 @@ class PagedScheduler:
                 used_pages=self.pool.used_pages)
         return live
 
-    def _run_batch(self, rows, plan, n_rows: int, t_step: int) -> np.ndarray:
+    def _submit_plan(self, phase: str, rows, poss) -> None:
+        """analysis_debug gate: prove the page-aliasing invariants for one
+        launch before it reaches the device.  ``rows`` = [(batch_row,
+        lane_idx, lane)]; ``poss`` maps lane index -> the token positions
+        this launch writes for that lane.  Positions past the lane's page
+        table (the pad position) land in the garbage page on device, and
+        the checker exempts garbage-page aliasing by design."""
+        from repro.analysis.races import PageWrite, TickPlan, assert_plan_ok
+
+        ps = self.page_size
+        writes = []
+        for _, i, l in rows:
+            for pos in poss[i]:
+                pi = pos // ps
+                page = l.pages[pi] if 0 <= pi < len(l.pages) else GARBAGE_PAGE
+                writes.append(PageWrite(
+                    lane=i, uid=l.req.uid, page=page, offset=pos % ps))
+        touched = {w.page for w in writes}
+        plan = TickPlan.build(
+            phase=phase, page_size=ps, writes=writes,
+            refcounts={p: self.pool.refcount(p) for p in touched
+                       if 0 <= p < self.pool.n_pages},
+            trie_pages=self.prefix.pages() if self.prefix is not None else (),
+            free_pages=self.pool.free_page_ids(),
+            garbage_page=GARBAGE_PAGE,
+        )
+        assert_plan_ok(plan)
+        self.plans_checked += 1
+
+    def _run_batch(self, rows, plan, n_rows: int, t_step: int,
+                   phase: str = "step") -> np.ndarray:
         """Issue one call of the unified step for ``rows`` = [(batch_row,
         lane_idx, lane)]. Pad rows/columns carry the garbage position, so
         their writes land in the garbage page and every real row's
         ``kpos <= tpos`` mask excludes them."""
+        if self.analysis_debug:
+            self._submit_plan(phase, rows, {
+                i: range(l.pos, l.pos + plan[i]) for _, i, l in rows})
         tokens = np.zeros((n_rows, t_step), np.int32)
         positions = np.full((n_rows, t_step), self.pad_pos, np.int32)
         last_idx = np.zeros((n_rows,), np.int32)
@@ -850,7 +892,8 @@ class PagedScheduler:
         t_step = min(pow2_bucket(max(plan[i] for _, i, _ in rows)),
                      self.prefill_chunk)
         t0 = time.perf_counter()
-        logits = self._run_batch(rows, plan, self.prefill_lanes, t_step)
+        logits = self._run_batch(rows, plan, self.prefill_lanes, t_step,
+                                 phase="prefill")
         now = time.perf_counter()
         if self._tr.enabled:
             for r, i, l in rows:
@@ -896,7 +939,7 @@ class PagedScheduler:
         width = width_bucket(len(live), self.b)
         rows = [(r, i, l) for r, (i, l) in enumerate(live)]
         t0 = time.perf_counter()
-        logits = self._run_batch(rows, plan, width, 1)
+        logits = self._run_batch(rows, plan, width, 1, phase="decode")
         now = time.perf_counter()
         if self._tr.enabled:
             extra = ({"est_pj": self._hw_prices["decode"][0] * len(live)}
@@ -978,6 +1021,17 @@ class PagedScheduler:
     def _run_draft(self, rows, toks, poss, width: int,
                    t_step: int) -> np.ndarray:
         """One fused draft call → all gamma proposals [width, gamma]."""
+        if self.analysis_debug and self._provider.shared_cache:
+            # the fused call feeds poss[i] then scans gamma-1 single-token
+            # steps, each writing the next position — the full write span is
+            # poss[i] plus (gamma - 1) positions past its end.  Own-cache
+            # providers write the draft pool, whose ledger the target pool's
+            # refcounts/trie do not govern (catch-up deliberately rewrites
+            # shared-prefix draft rows; the rewrite is idempotent).
+            g = self.spec.gamma
+            self._submit_plan("spec_draft", rows, {
+                i: list(poss[i]) + [poss[i][-1] + 1 + k for k in range(g - 1)]
+                for _, i, _ in rows})
         tokens, positions, last_idx, table = self._pack_rows(
             rows, toks, poss, width, t_step)
         caches = (self.caches if self._provider.shared_cache
@@ -1032,6 +1086,8 @@ class PagedScheduler:
 
     def _run_verify(self, rows, toks, poss, width: int,
                     t_step: int) -> np.ndarray:
+        if self.analysis_debug:
+            self._submit_plan("spec_verify", rows, poss)
         tokens, positions, _, table = self._pack_rows(
             rows, toks, poss, width, t_step)
         logits, self.caches = self._verify_step(

@@ -12,7 +12,6 @@ losses are computed on the last stage and psum'd back.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

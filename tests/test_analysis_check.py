@@ -1,0 +1,99 @@
+"""End-to-end CLI tests for ``python -m repro.analysis.check``: a freshly
+frozen smoke artifact passes (exit 0) and gets its verdict recorded in the
+manifest; structural failure modes exit nonzero."""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.analysis.check import main, verdict_of
+from repro.analysis.findings import Finding
+
+
+@pytest.fixture(scope="module")
+def smoke_artifact(tmp_path_factory):
+    import jax
+
+    from repro.configs.registry import ARCHS, reduce_for_smoke
+    from repro.core.da import DAConfig
+    from repro.core.freeze import freeze_model, save_artifact
+    from repro.models.model import init_model
+
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
+                              moe_dropless=True)
+    params = init_model(jax.random.key(0), cfg)
+    art = freeze_model(params, DAConfig(x_signed=True),
+                       mode="da_bitplane_stacked", model_cfg=cfg)
+    directory = str(tmp_path_factory.mktemp("art") / "smoke_da")
+    save_artifact(directory, art)
+    return directory
+
+
+@pytest.mark.slow
+def test_cli_passes_on_smoke_artifact_and_records_verdict(
+        smoke_artifact, tmp_path):
+    out = str(tmp_path / "findings.json")
+    rc = main(["--artifact", smoke_artifact, "--json", out])
+    assert rc == 0
+    with open(os.path.join(smoke_artifact, "manifest.json")) as f:
+        verdict = json.load(f)["analysis"]
+    assert verdict["ok"] is True and verdict["errors"] == 0
+    assert "decode[fused]" in verdict["steps_checked"]
+    assert "spec_draft[fused]" in verdict["steps_checked"]
+    with open(out) as f:
+        assert json.load(f) == []
+    # the recorded verdict round-trips through load_artifact
+    from repro.core.freeze import load_artifact
+
+    assert load_artifact(smoke_artifact).analysis["ok"] is True
+
+
+@pytest.mark.slow
+def test_cli_no_record_leaves_manifest_alone(smoke_artifact):
+    from repro.core.freeze import record_analysis
+
+    record_analysis(smoke_artifact, {"ok": True, "marker": "before"})
+    rc = main(["--artifact", smoke_artifact, "--no-record", "--no-lint",
+               "--no-hlo"])
+    assert rc == 0
+    with open(os.path.join(smoke_artifact, "manifest.json")) as f:
+        assert json.load(f)["analysis"]["marker"] == "before"
+
+
+def test_cli_lint_only_is_fast_and_clean():
+    assert main(["--lint-only"]) == 0
+
+
+def test_cli_artifact_without_model_cfg_fails(tmp_path):
+    """An artifact whose manifest lacks model_cfg cannot be traced — that
+    is an error finding and a nonzero exit, not a silent skip."""
+    import jax.numpy as jnp
+
+    from repro.core.da import DAConfig
+    from repro.core.freeze import freeze_model, save_artifact
+
+    params = {"mixer": {"wq": jnp.zeros((32, 16), jnp.float32)}}
+    art = freeze_model(params, DAConfig(x_signed=True), mode="da_bitplane")
+    directory = str(tmp_path / "bare_da")
+    save_artifact(directory, art)
+    rc = main(["--artifact", directory, "--no-lint"])
+    assert rc == 1
+
+
+def test_verdict_of_counts_by_severity():
+    findings = [
+        Finding(pass_name="graph/x", severity="error", op="a", hint=""),
+        Finding(pass_name="graph/x", severity="warning", op="b", hint=""),
+        Finding(pass_name="lint/y", severity="note", op="c", hint=""),
+    ]
+    v = verdict_of(findings, ["decode[fused]"])
+    assert v["ok"] is False
+    assert (v["errors"], v["warnings"], v["notes"]) == (1, 1, 1)
+    assert v["findings_by_pass"] == {"graph/x": 2, "lint/y": 1}
+    assert v["steps_checked"] == ["decode[fused]"]
+
+
+def test_verdict_of_clean():
+    v = verdict_of([], ["decode[gather]"])
+    assert v["ok"] is True and v["schema"] == 1

@@ -1,0 +1,134 @@
+"""AST lint rule tests (repro.analysis.lint): each rule catches its seeded
+mutation, each exemption holds, and the live repo is clean."""
+import textwrap
+
+from repro.analysis.lint import lint_repo, lint_source
+
+
+def _lint(src, path="src/repro/serve/example.py"):
+    return lint_source(textwrap.dedent(src), path)
+
+
+# -- L001 interpret-hardcoded ------------------------------------------------
+
+
+def test_hardcoded_interpret_true_is_caught():
+    findings = _lint("""
+        import jax.experimental.pallas as pl
+        out = pl.pallas_call(kernel, out_shape=shape, interpret=True)(x)
+    """, path="src/repro/kernels/foo.py")
+    assert any(f.pass_name == "lint/interpret-hardcoded" for f in findings)
+
+
+def test_platform_derived_interpret_is_fine():
+    findings = _lint("""
+        out = pl.pallas_call(kernel, out_shape=shape,
+                             interpret=jax.default_backend() != "tpu")(x)
+    """, path="src/repro/kernels/foo.py")
+    assert findings == []
+
+
+def test_tests_may_pin_interpret():
+    """Kernel-vs-oracle unit tests pin interpret=True on purpose."""
+    findings = _lint(
+        "out = pl.pallas_call(kernel, interpret=True)(x)\n",
+        path="tests/test_kernels.py",
+    )
+    assert findings == []
+
+
+# -- L002 raw-clock ----------------------------------------------------------
+
+
+def test_time_time_in_scheduler_is_caught():
+    findings = _lint("""
+        import time
+        t0 = time.time()
+    """, path="src/repro/serve/scheduler.py")
+    assert any(f.pass_name == "lint/raw-clock" for f in findings)
+
+
+def test_perf_counter_is_fine():
+    findings = _lint("""
+        import time
+        t0 = time.perf_counter()
+    """, path="src/repro/obs/trace.py")
+    assert findings == []
+
+
+def test_time_time_outside_obs_scope_is_not_flagged():
+    findings = _lint("""
+        import time
+        stamp = time.time()
+    """, path="benchmarks/stamp.py")
+    assert findings == []
+
+
+# -- L003 metrics-bypass -----------------------------------------------------
+
+
+def test_counter_total_assignment_is_caught():
+    findings = _lint("self._c_steps.total = 0\n")
+    assert any(f.pass_name == "lint/metrics-bypass" for f in findings)
+
+
+def test_counter_total_augassign_is_caught():
+    findings = _lint("self._c_steps.total += 1\n")
+    assert any(f.pass_name == "lint/metrics-bypass" for f in findings)
+
+
+def test_registry_mutators_are_fine():
+    findings = _lint("""
+        self._c_steps.inc()
+        self._g_lanes.set(3)
+        self._h_ttft.observe(0.5)
+    """)
+    assert findings == []
+
+
+# -- L004 bench-writer -------------------------------------------------------
+
+
+def test_raw_bench_json_writer_is_caught():
+    findings = _lint(
+        'f = open("artifacts/BENCH_energy.json", "w")\n',
+        path="benchmarks/energy_report.py",
+    )
+    assert any(f.pass_name == "lint/bench-writer" for f in findings)
+
+
+def test_fstring_bench_writer_is_caught():
+    findings = _lint(
+        'f = open(f"{outdir}/BENCH_{name}.json", mode="w")\n',
+        path="benchmarks/energy_report.py",
+    )
+    assert any(f.pass_name == "lint/bench-writer" for f in findings)
+
+
+def test_bench_json_read_is_fine():
+    findings = _lint(
+        'payload = open("artifacts/BENCH_energy.json", "r").read()\n',
+        path="benchmarks/run.py",
+    )
+    assert findings == []
+
+
+def test_stamp_module_is_exempt():
+    findings = _lint(
+        'f = open("artifacts/BENCH_energy.json", "w")\n',
+        path="benchmarks/stamp.py",
+    )
+    assert findings == []
+
+
+# -- parse failures and the live tree ---------------------------------------
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    findings = _lint("def broken(:\n")
+    assert len(findings) == 1 and findings[0].pass_name == "lint/parse"
+
+
+def test_live_repo_is_lint_clean():
+    findings = lint_repo()
+    assert findings == [], "\n".join(f.format() for f in findings)

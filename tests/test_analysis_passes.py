@@ -1,0 +1,199 @@
+"""Graph-pass tests for the static verifier (repro.analysis.passes/graph).
+
+The load-bearing claims, each pinned with both the clean case and a seeded
+mutation:
+
+* every registered DA backend's jaxpr is multiplier-free (zero findings);
+* the float baseline, the dequantize-then-matmul cheat, and a float dot on
+  raw integer codes are all flagged — without any exemption allowlist;
+* a gather materializing the [B, W·ps, kv, hd] page view is caught when
+  the lowering claims the fused path;
+* synthetic-HLO units for the host-sync and dtype-discipline passes.
+
+The full serving-graph sweep (trace + compile of decode/prefill/spec-draft
+under both attention backends) is @slow; tier-1 covers the pass engine on
+per-backend da_matmul jaxprs, which trace in milliseconds.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.findings import errors
+from repro.analysis.graph import arg_taints, trace_serving_steps
+from repro.analysis.passes import (
+    DEFAULT_ALLOWLIST,
+    apply_allowlist,
+    dtype_discipline,
+    multiplier_free,
+    no_big_gather,
+    no_host_sync,
+    run_passes,
+)
+from repro.configs.registry import ARCHS, reduce_for_smoke
+from repro.core.da import DAConfig
+from repro.core.engine import da_matmul, pack_weights, registered_backends
+from repro.core.freeze import freeze_model
+
+
+def _jaxpr_and_taints(fn, *args):
+    return jax.make_jaxpr(fn)(*args), arg_taints(args)
+
+
+def _check(fn, *args, allow=()):
+    closed, taints = _jaxpr_and_taints(fn, *args)
+    return apply_allowlist(
+        multiplier_free(closed, taints, step_name="unit"), allow)
+
+
+RNG = np.random.default_rng(7)
+X = jnp.asarray(RNG.standard_normal((4, 32)), jnp.float32)
+W = jnp.asarray(RNG.standard_normal((32, 16)) * 0.1, jnp.float32)
+
+
+# -- every DA backend is multiplier-free ------------------------------------
+
+
+@pytest.mark.parametrize("mode", sorted(registered_backends()))
+def test_da_backend_is_multiplier_free(mode):
+    packed = pack_weights(W, DAConfig(x_signed=True), mode=mode)
+    findings = _check(lambda x, p: da_matmul(x, p, mode=mode), X, packed)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# -- the cheats are flagged (no allowlist) -----------------------------------
+
+
+def test_float_baseline_is_flagged():
+    params = {"w": W}
+    findings = _check(lambda x, p: x @ p["w"], X, params)
+    assert errors(findings), "float x @ W must be flagged"
+
+
+def test_dequantize_then_matmul_cheat_is_flagged():
+    """Unpacking the int8 codes back to float and multiplying is the exact
+    cheat the taint lattice exists to catch: INT_EXACT promotes to FLOAT
+    under float arithmetic, and the dot sees a float weight operand."""
+    packed = pack_weights(W, DAConfig(x_signed=True), mode="bitplane")
+
+    def cheat(x, p):
+        w = p.wq.astype(jnp.float32) * p.w_scale
+        return x @ w
+
+    findings = _check(cheat, X, packed)
+    assert errors(findings), "dequant-then-matmul must be flagged"
+
+
+def test_float_dot_on_integer_codes_is_flagged():
+    packed = pack_weights(W, DAConfig(x_signed=True), mode="bitplane")
+    findings = _check(lambda x, p: x @ p.wq.astype(jnp.float32), X, packed)
+    assert errors(findings), "float dot on raw int codes must be flagged"
+
+
+def test_allowlist_suppresses_by_substring():
+    """The allowlist matches a finding's source location (where) — the
+    same mechanism that exempts core/bitslice.py by default."""
+    params = {"w": W}
+    findings = _check(lambda x, p: x @ p["w"], X, params)
+    assert findings
+    assert apply_allowlist(findings, ("test_analysis_passes",)) == []
+
+
+def test_bitslice_counterfactual_is_allowlisted_by_default():
+    """The bit-slicing comparison baseline (core/bitslice.py) is integer
+    eACM emulation, not a served path; the default allowlist names it."""
+    assert any("bitslice" in tok for tok in DEFAULT_ALLOWLIST)
+
+
+# -- structural HLO passes on synthetic modules ------------------------------
+
+_VIEW = 2 * 40 * 2 * 16 * 4  # [B=2, W·ps=40, kv=2, hd=16] f32
+
+
+def test_no_big_gather_flags_view_sized_gather():
+    txt = "  %g = f32[2,40,2,16]{3,2,1,0} gather(%pool, %idx)\n"
+    findings = no_big_gather(txt, _VIEW, step_name="decode[fused]")
+    assert errors(findings)
+    assert findings[0].bytes >= _VIEW
+
+
+def test_no_big_gather_ignores_small_gathers():
+    txt = "  %g = f32[2,16]{1,0} gather(%emb, %ids)\n"
+    assert no_big_gather(txt, _VIEW, step_name="decode[fused]") == []
+
+
+def test_no_host_sync_flags_host_callback():
+    txt = ('  %cb = f32[4]{0} custom-call(%a), '
+           'custom_call_target="xla_python_cpu_callback"\n')
+    assert errors(no_host_sync(txt, step_name="decode"))
+
+
+def test_no_host_sync_flags_infeed_outfeed():
+    txt = "  %i = (f32[4]{0}, token[]) infeed(%tok)\n"
+    assert errors(no_host_sync(txt, step_name="decode"))
+
+
+def test_no_host_sync_accepts_device_custom_calls():
+    txt = ('  %cc = f32[4]{0} custom-call(%a), '
+           'custom_call_target="tpu_custom_call"\n')
+    assert no_host_sync(txt, step_name="decode") == []
+
+
+def test_dtype_discipline_flags_f64():
+    txt = "  %c = f64[4]{0} convert(%a)\n"
+    assert errors(dtype_discipline(txt, step_name="decode"))
+
+
+def test_dtype_discipline_flags_sub_f32_exponential():
+    txt = "  %e = bf16[4]{0} exponential(%a)\n"
+    assert errors(dtype_discipline(txt, step_name="decode"))
+
+
+def test_dtype_discipline_accepts_f32_softmax_and_int_dots():
+    txt = (
+        "  %e = f32[4]{0} exponential(%a)\n"
+        "  %d = s32[4,8]{1,0} dot(%xq, %wq)\n"
+    )
+    assert dtype_discipline(txt, step_name="decode") == []
+
+
+# -- the full serving graph (slow: freeze + trace + XLA compile) -------------
+
+
+@pytest.fixture(scope="module")
+def served_steps():
+    from repro.models.model import init_model
+
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
+                              moe_dropless=True)
+    params = init_model(jax.random.key(0), cfg)
+    art = freeze_model(params, DAConfig(x_signed=True),
+                       mode="da_bitplane_stacked", model_cfg=cfg)
+    return trace_serving_steps(art.params, cfg, spec_gamma=2)
+
+
+@pytest.mark.slow
+def test_frozen_serving_graph_has_zero_findings(served_steps):
+    assert [s.name for s in served_steps] == [
+        "decode[gather]", "prefill[gather]",
+        "decode[fused]", "prefill[fused]", "spec_draft[fused]",
+    ]
+    findings = run_passes(served_steps)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+@pytest.mark.slow
+def test_gather_lowering_forged_as_fused_is_caught(served_steps):
+    """Mutation: take the gather-backend decode lowering (which legal-ly
+    materializes the page view) and claim it came from the fused path —
+    the no-big-gather pass must fire."""
+    gather_decode = next(s for s in served_steps
+                         if s.name == "decode[gather]")
+    forged = dataclasses.replace(gather_decode, fused=True,
+                                 name="decode[forged-fused]")
+    findings = run_passes([forged])
+    gathers = [f for f in errors(findings)
+               if f.pass_name == "graph/no-big-gather"]
+    assert gathers, "view-sized gather forged as fused must be flagged"

@@ -1,0 +1,189 @@
+"""Page-aliasing race detector tests (repro.analysis.races) plus the
+scheduler's analysis_debug mode.
+
+Forged-plan units prove each invariant fires on its own violation; the
+@slow stress test drives a live engine — prefix-cache sharing, optimistic
+admission, tight page pool (preemptions), speculative decoding with
+rollback — with every launch plan submitted to the checker, and asserts
+the whole schedule validates with zero findings while emitting tokens
+identical to a debug-off run.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.races import (
+    PageRaceError,
+    PageWrite,
+    TickPlan,
+    assert_plan_ok,
+    check_plan,
+)
+
+
+def _plan(writes, refcounts, trie=(), free=(), ps=4, phase="decode"):
+    return TickPlan.build(
+        phase=phase, page_size=ps, writes=writes, refcounts=refcounts,
+        trie_pages=trie, free_pages=free,
+    )
+
+
+def test_clean_plan_has_no_findings():
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=3, offset=1),
+                PageWrite(lane=1, uid=11, page=5, offset=1)],
+        refcounts={3: 1, 5: 1},
+    )
+    assert check_plan(plan) == []
+    assert_plan_ok(plan)  # no raise
+
+
+def test_double_write_same_slot_is_caught():
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=3, offset=2),
+                PageWrite(lane=1, uid=11, page=3, offset=2)],
+        refcounts={3: 1},
+    )
+    findings = check_plan(plan)
+    assert any("double-write" in f.op for f in findings)
+    with pytest.raises(PageRaceError) as ei:
+        assert_plan_ok(plan)
+    assert ei.value.plan is plan and ei.value.findings
+
+
+def test_same_lane_rewriting_a_slot_is_not_a_race():
+    """One lane touching the same slot twice in a launch (e.g. a clamped
+    pad column) is not cross-lane scatter nondeterminism."""
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=3, offset=2),
+                PageWrite(lane=0, uid=10, page=3, offset=2)],
+        refcounts={3: 1},
+    )
+    assert check_plan(plan) == []
+
+
+def test_shared_page_write_without_cow_is_caught():
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=3, offset=0)],
+        refcounts={3: 2},
+    )
+    findings = check_plan(plan)
+    assert any("refcount=2" in f.op for f in findings)
+
+
+def test_prefix_trie_page_write_is_caught():
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=7, offset=0)],
+        refcounts={7: 1},
+        trie=[7],
+    )
+    findings = check_plan(plan)
+    assert any("prefix-trie" in f.op for f in findings)
+
+
+def test_free_page_write_is_caught():
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=4, offset=0)],
+        refcounts={4: 0},
+        free=[4],
+    )
+    findings = check_plan(plan)
+    assert any("unallocated" in f.op for f in findings)
+
+
+def test_offset_outside_page_is_caught():
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=3, offset=4)],  # ps=4
+        refcounts={3: 1},
+    )
+    findings = check_plan(plan)
+    assert any("offset" in f.op for f in findings)
+
+
+def test_garbage_page_is_exempt():
+    """Pad rows and clamped positions dump to page 0 by design — even
+    'double writes' and a zero refcount there are not findings."""
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=0, offset=0),
+                PageWrite(lane=1, uid=11, page=0, offset=0),
+                PageWrite(lane=2, uid=12, page=0, offset=99)],
+        refcounts={},
+    )
+    assert check_plan(plan) == []
+
+
+def test_one_bad_write_among_good_ones_reports_only_the_bad():
+    plan = _plan(
+        writes=[PageWrite(lane=0, uid=10, page=3, offset=0),
+                PageWrite(lane=1, uid=11, page=5, offset=0),
+                PageWrite(lane=2, uid=12, page=5, offset=0)],
+        refcounts={3: 1, 5: 1},
+    )
+    findings = check_plan(plan)
+    assert len(findings) == 1 and "double-write" in findings[0].op
+    assert "lane2" in findings[0].where
+
+
+# -- the scheduler's analysis_debug mode (live engine stress) ----------------
+
+
+@pytest.mark.slow
+def test_debug_mode_validates_stress_schedule_and_preserves_tokens():
+    """Prefix sharing + optimistic admission + a pool tight enough to
+    preempt + speculative decode with rollback: every launch plan this
+    schedule produces must pass the checker, and checking must not perturb
+    a single emitted token."""
+    import jax
+
+    from repro.configs.registry import ARCHS, reduce_for_smoke
+    from repro.core.da import DAConfig
+    from repro.core.freeze import freeze_model
+    from repro.models.model import init_model
+    from repro.serve.engine import Request, ServeEngine
+    from repro.spec import SpecConfig
+
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
+                              moe_dropless=True)
+    params = init_model(jax.random.key(0), cfg)
+    art = freeze_model(params, DAConfig(x_signed=True),
+                       mode="da_bitplane_stacked", model_cfg=cfg)
+    kw = dict(batch_size=3, max_len=48, page_size=4, n_pages=12,
+              prefill_chunk=4, admission="optimistic", prefix_cache=True,
+              spec=SpecConfig(provider="bitplane", gamma=2, draft_x_bits=6,
+                              disable_below=0.0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, 90, size=n)) for n in (7, 9, 7, 5, 11, 9)]
+    prompts[2] = prompts[0]  # exact shared prefix: exercises the trie + COW
+
+    def run(debug):
+        eng = ServeEngine(cfg, art.params, greedy=True,
+                          analysis_debug=debug, **kw)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=6))
+        done = eng.run()
+        outs = {uid: r.generated for uid, r in sorted(done.items())}
+        return outs, eng._rt.plans_checked
+
+    debug_out, checked = run(True)        # raises PageRaceError on any race
+    plain_out, unchecked = run(False)
+    assert checked > 0, "debug mode must actually submit plans"
+    assert unchecked == 0
+    assert debug_out == plain_out, "checking must not perturb tokens"
+    assert all(len(toks) == 6 for toks in debug_out.values())
+
+
+@pytest.mark.slow
+def test_debug_mode_rejected_on_slot_runtime():
+    import jax
+
+    from repro.configs.registry import ARCHS, reduce_for_smoke
+    from repro.models.model import init_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = reduce_for_smoke(ARCHS["qwen3-8b"])
+    cfg = dataclasses.replace(cfg, moe_dropless=True)
+    params = init_model(jax.random.key(0), cfg)
+    with pytest.raises(ValueError, match="analysis_debug"):
+        ServeEngine(cfg, params, batch_size=2, max_len=32,
+                    runtime="slots", analysis_debug=True)

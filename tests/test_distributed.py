@@ -173,7 +173,7 @@ def test_da_serving_under_sharding():
         from repro.launch.mesh import make_test_mesh
         from repro.launch.sharding import use_mesh_rules
         from repro.models.model import forward, init_model
-        from repro.serve.quantize import freeze_model_da
+        from repro.core.freeze import freeze_model_da
 
         cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen3-8b"]),
                                   moe_dropless=True)

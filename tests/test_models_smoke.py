@@ -1,7 +1,5 @@
 """Per-architecture smoke tests (assignment requirement): reduced same-family
 configs, one forward + one train step on CPU, asserting shapes + no NaNs."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

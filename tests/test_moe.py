@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import ARCHS, reduce_for_smoke
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_mlp
 from repro.models.moe import init_moe, moe_forward, padded_experts
@@ -28,7 +27,6 @@ def _cfg(**kw):
 def _loop_reference(p, x, cfg):
     """Per-token top-k expert mixture, computed with plain loops."""
     b, t, d = x.shape
-    e_pad = p["router"].shape[1]
     logits = np.array(x.reshape(-1, d) @ p["router"])
     logits[:, cfg.n_experts:] = -np.inf
     gates = jax.nn.softmax(jnp.asarray(logits), axis=-1)

@@ -67,5 +67,6 @@ def test_compression_roundtrip_and_ef():
         acc_comp += np.asarray(decompress_leaf(q, s))
         acc_true += np.asarray(gi["w"])
     residual = np.abs(acc_true - acc_comp).max()
-    direct_err = 50 ** 0.5 * float(s) * 0.5  # w/o EF: random-walk growth
-    assert residual < float(np.asarray(s)) * 2  # EF keeps it to one quantum
+    # w/o error feedback the residual would random-walk (~sqrt(50)*s/2);
+    # EF keeps it to one quantum
+    assert residual < float(np.asarray(s)) * 2

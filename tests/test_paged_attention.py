@@ -33,7 +33,7 @@ from repro.kernels.paged_attention import paged_attention
 from repro.models.attention import paged_gather_read
 from repro.models.model import forward, init_model
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.kvcache import pages_for, table_array, table_width
+from repro.serve.kvcache import pages_for, table_width
 
 KEY = jax.random.key(0)
 MAX_NEW = 4

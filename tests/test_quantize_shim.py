@@ -1,0 +1,27 @@
+"""The repro.serve.quantize compat shim: deprecation warning on import,
+surface identity with repro.core.freeze."""
+import importlib
+import sys
+import warnings
+
+
+def test_import_emits_deprecation_warning():
+    sys.modules.pop("repro.serve.quantize", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        import repro.serve.quantize  # noqa: F401
+    assert any(issubclass(w.category, DeprecationWarning)
+               and "repro.core.freeze" in str(w.message) for w in caught)
+
+
+def test_shim_reexports_are_identical():
+    import repro.core.freeze as canonical
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sys.modules.pop("repro.serve.quantize", None)
+        shim = importlib.import_module("repro.serve.quantize")
+    for name in ("freeze_model", "freeze_model_da", "da_memory_report",
+                 "save_artifact", "load_artifact", "DAArtifact",
+                 "LayerPlan", "plan_model"):
+        assert getattr(shim, name) is getattr(canonical, name), name

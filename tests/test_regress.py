@@ -1,0 +1,102 @@
+"""Malformed-payload behavior of the benchmark regression gate
+(``repro.obs.regress``): the gate must fail loudly — never pass — when a
+payload is structurally broken (missing regress_keys, NaN values, schema
+version skew, unstamped files)."""
+import json
+import math
+
+from repro.obs.regress import compare, main
+
+
+def _payload(**kw):
+    base = {
+        "metrics_schema_version": 1,
+        "regress_keys": ["hw.energy_pj"],
+        "hw": {"energy_pj": 100.0},
+    }
+    base.update(kw)
+    return base
+
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+def test_clean_payload_passes(tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _payload())
+    committed = _write(tmp_path, "committed.json", _payload())
+    assert main([fresh, committed]) == 0
+
+
+def test_missing_regress_keys_is_usage_error(tmp_path):
+    """A committed payload that declares nothing to guard (and no --key)
+    exits 2 — an empty comparison must not masquerade as a green gate."""
+    committed = _payload()
+    del committed["regress_keys"]
+    fresh = _write(tmp_path, "fresh.json", _payload())
+    cpath = _write(tmp_path, "committed.json", committed)
+    assert main([fresh, cpath]) == 2
+    # ...unless --key supplies the comparison set explicitly
+    assert main([fresh, cpath, "--key", "hw.energy_pj"]) == 0
+
+
+def test_regress_keys_wrong_type_is_usage_error(tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _payload())
+    cpath = _write(
+        tmp_path, "committed.json", _payload(regress_keys="hw.energy_pj"))
+    assert main([fresh, cpath]) == 2
+
+
+def test_nan_value_is_a_regression(tmp_path):
+    """NaN compares False against any tolerance band; the gate must treat
+    a non-finite metric as a failure, not let it sail through."""
+    nan_payload = _payload(hw={"energy_pj": math.nan})
+    errs = compare(nan_payload, _payload(), ["hw.energy_pj"], 0.25)
+    assert errs and "non-finite" in errs[0]
+    # symmetric: a NaN in the committed reference also fails
+    errs = compare(_payload(), nan_payload, ["hw.energy_pj"], 0.25)
+    assert errs and "non-finite" in errs[0]
+    # and through the CLI it exits 1 (regression), not 0
+    fresh = _write(tmp_path, "fresh.json", nan_payload)
+    committed = _write(tmp_path, "committed.json", _payload())
+    assert main([fresh, committed]) == 1
+
+
+def test_infinity_is_a_regression():
+    errs = compare(_payload(hw={"energy_pj": math.inf}), _payload(),
+                   ["hw.energy_pj"], 0.25)
+    assert errs and "non-finite" in errs[0]
+
+
+def test_schema_version_skew_fails_before_key_compare(tmp_path):
+    """A version drift is a schema change, not a noise band: it must fail
+    even when every compared value is identical."""
+    fresh = _write(tmp_path, "fresh.json",
+                   _payload(metrics_schema_version=2))
+    committed = _write(tmp_path, "committed.json", _payload())
+    assert main([fresh, committed]) == 1
+    errs = compare(_payload(metrics_schema_version=2), _payload(),
+                   ["hw.energy_pj"], 0.25)
+    assert len(errs) == 1 and "schema version mismatch" in errs[0]
+
+
+def test_unstamped_payload_is_usage_error(tmp_path):
+    unstamped = {"hw": {"energy_pj": 100.0}}
+    fresh = _write(tmp_path, "fresh.json", unstamped)
+    committed = _write(tmp_path, "committed.json", _payload())
+    assert main([fresh, committed]) == 2
+
+
+def test_truncated_json_is_usage_error(tmp_path):
+    p = tmp_path / "fresh.json"
+    p.write_text('{"metrics_schema_version": 1, "hw": {')
+    committed = _write(tmp_path, "committed.json", _payload())
+    assert main([str(p), committed]) == 2
+
+
+def test_missing_key_in_fresh_is_a_regression(tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _payload(hw={}))
+    committed = _write(tmp_path, "committed.json", _payload())
+    assert main([fresh, committed]) == 1

@@ -11,7 +11,7 @@ from repro.core.da import DAConfig
 from repro.core.linear import DAFrozenLinear
 from repro.models.model import forward, init_model
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.quantize import da_memory_report, freeze_model_da
+from repro.core.freeze import da_memory_report, freeze_model_da
 
 KEY = jax.random.key(0)
 

@@ -33,6 +33,8 @@ def test_data_determinism_and_sharding():
     assert b1["inputs"].shape == (8, 16)
     # labels are next-token shifted
     full = batch_at(dc, 0)
+    np.testing.assert_array_equal(full["labels"][:, :-1],
+                                  full["inputs"][:, 1:])
     # host sharding partitions the batch exactly
     sh0 = host_shard(b1, 0, 4)["inputs"]
     sh3 = host_shard(b1, 3, 4)["inputs"]
